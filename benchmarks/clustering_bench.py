@@ -1,0 +1,49 @@
+"""§III-B benchmark: satellite-clustered PS selection quality/convergence.
+
+For constellations of increasing size, reports k-means iterations to Eq. 15
+convergence, mean intra-cluster distance (drives Eq. 6-8 link costs), and
+the transmission-energy proxy of FedHC PS selection vs random PS placement
+— the mechanism behind Table I's energy gap.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering as cl
+from repro.orbits.constellation import Constellation
+from repro.orbits.links import LinkParams, tx_energy_j
+
+
+def main():
+    lp = LinkParams()
+    print("name,us_per_call,derived")
+    for n_sats, k in [(64, 4), (256, 8), (1024, 16)]:
+        planes = int(n_sats ** 0.5)
+        c = Constellation(num_planes=planes, sats_per_plane=n_sats // planes)
+        pos = c.positions(0.0)
+        rng = jax.random.PRNGKey(0)
+
+        t0 = time.perf_counter()
+        res = cl.kmeans(pos, k, rng)
+        jax.block_until_ready(res.centroids)
+        us = (time.perf_counter() - t0) * 1e6
+
+        # FedHC PS (nearest centroid) vs random PS: energy per round
+        d_fedhc = jnp.linalg.norm(pos - pos[res.ps_index][res.assignment],
+                                  axis=-1)
+        rnd_ps = jax.random.randint(rng, (k,), 0, n_sats)
+        d_rand = jnp.linalg.norm(pos - pos[rnd_ps][res.assignment], axis=-1)
+        bits = 1.4e6                      # LeNet model upload
+        e_fedhc = float(jnp.sum(tx_energy_j(bits, d_fedhc, lp)))
+        e_rand = float(jnp.sum(tx_energy_j(bits, d_rand, lp)))
+        print(f"kmeans_n{n_sats}_k{k},{us:.0f},"
+              f"iters={int(res.iterations)};"
+              f"tx_energy_fedhc={e_fedhc:.1f}J;random_ps={e_rand:.1f}J;"
+              f"saving={(1 - e_fedhc / e_rand) * 100:.0f}%")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,66 @@
+"""Paper Fig. 3: model accuracy vs training round for each method, across
+clustering configurations K in {3,4,5}, on both datasets.
+
+Writes results/fig3_accuracy.json and prints an ASCII summary.
+C-FedAvg is centralized (K=1) so it runs once per dataset and is reused
+across K columns — exactly the paper's footnote.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+from benchmarks.fl_common import DATASETS, KS, METHODS, make_cfg
+from repro.core.fedhc import run_fl
+
+
+def run(out_path="results/fig3_accuracy.json", datasets=("mnist-like",
+                                                         "cifar-like")):
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    results = {}
+    if os.path.exists(out_path):           # resume: skip completed cells
+        with open(out_path) as f:
+            results = json.load(f)
+    for ds_name in datasets:
+        ds = DATASETS[ds_name]
+        cfa = None
+        for k in KS:
+            for method in METHODS:
+                key = f"{ds_name}/K={k}/{method}"
+                if key in results:
+                    if method == "c-fedavg" and cfa is None:
+                        cfa = results[key]
+                    continue
+                if method == "c-fedavg":
+                    if cfa is None:
+                        t0 = time.time()
+                        cfa = run_fl(make_cfg(method, k, ds))
+                        cfa["wall_s"] = round(time.time() - t0, 1)
+                    results[key] = cfa
+                    continue
+                t0 = time.time()
+                h = run_fl(make_cfg(method, k, ds))
+                h["wall_s"] = round(time.time() - t0, 1)
+                results[key] = h
+                print(f"[fig3] {key}: final acc {h['acc'][-1]:.3f} "
+                      f"(wall {h['wall_s']}s)", flush=True)
+                with open(out_path, "w") as f:   # incremental: crash-safe
+                    json.dump(results, f)
+    with open(out_path, "w") as f:
+        json.dump(results, f)
+    return results
+
+
+def summarize(results) -> str:
+    lines = ["dataset,K,method,acc@25%,acc@50%,acc@final"]
+    for key, h in sorted(results.items()):
+        ds, k, m = key.split("/")
+        n = len(h["acc"])
+        lines.append(f"{ds},{k[2:]},{m},{h['acc'][n//4]:.3f},"
+                     f"{h['acc'][n//2]:.3f},{h['acc'][-1]:.3f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summarize(run()))

@@ -1,0 +1,32 @@
+"""Shared config for the FL experiment benchmarks (Fig. 3 / Table I).
+
+Scale-down vs the paper (800 satellites, MNIST/CIFAR-10): 32 satellites,
+synthetic datasets with MNIST/CIFAR geometry (see DESIGN.md §7).  The
+*relative* claims are what we reproduce; absolute seconds/joules depend on
+the (configurable) link constants.
+"""
+from __future__ import annotations
+
+from repro.core.fedhc import FLRunConfig
+from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
+
+NUM_CLIENTS = 32
+METHODS = ("c-fedavg", "h-base", "fedce", "fedhc")
+KS = (3, 4, 5)
+
+# paper §IV-B: converged target thresholds
+TARGET = {"mnist-like": 0.80, "cifar-like": 0.40}
+ROUNDS = {"mnist-like": 100, "cifar-like": 150}
+EVAL_EVERY = 5
+
+
+def make_cfg(method: str, k: int, dataset) -> FLRunConfig:
+    return FLRunConfig(
+        method=method, num_clients=NUM_CLIENTS, num_clusters=k,
+        rounds=ROUNDS[dataset.name], eval_every=EVAL_EVERY,
+        samples_per_client=96, local_steps=2, batch_size=64,
+        dataset=dataset, dirichlet_alpha=0.4, eval_size=1024, seed=17,
+    )
+
+
+DATASETS = {"mnist-like": MNIST_LIKE, "cifar-like": CIFAR_LIKE}

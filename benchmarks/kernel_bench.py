@@ -1,0 +1,74 @@
+"""Kernel microbenchmarks: name,us_per_call,derived CSV.
+
+On this CPU container the Pallas kernels run in interpret mode, so absolute
+microseconds measure the *reference semantics*, not TPU performance; the
+jnp oracle timings alongside give the apples-to-apples CPU comparison.
+`derived` reports achieved GB/s (weighted_agg, memory-bound) or GFLOP/s
+(attention / kmeans, compute-bound) for the measured wall time.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+
+
+def _time(fn: Callable, n: int = 5) -> float:
+    fn()                                   # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn()
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6       # us
+
+
+def rows() -> List[Tuple[str, float, str]]:
+    rng = jax.random.PRNGKey(0)
+    out = []
+
+    # weighted_agg: C=16 clients x 1M params
+    C, P = 16, 1_000_000
+    s = jax.random.normal(rng, (C, P))
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (C,))
+    bytes_moved = (C * P + P) * 4
+    us = _time(lambda: ref.weighted_agg_ref(s, w))
+    out.append(("weighted_agg_ref_jnp", us, f"{bytes_moved/us/1e3:.2f}GB/s"))
+    us = _time(lambda: ops.weighted_agg(s, w, interpret=True), n=2)
+    out.append(("weighted_agg_pallas_interp", us,
+                f"{bytes_moved/us/1e3:.2f}GB/s"))
+
+    # flash attention: B1 H8 S1024 D64
+    q = jax.random.normal(rng, (1, 8, 1024, 64))
+    k = jax.random.normal(jax.random.fold_in(rng, 2), (1, 4, 1024, 64))
+    v = jax.random.normal(jax.random.fold_in(rng, 3), (1, 4, 1024, 64))
+    flops = 2 * 2 * 8 * 1024 * 1024 * 64               # qk + pv
+    us = _time(lambda: ref.flash_attention_ref(q, k, v, causal=True))
+    out.append(("flash_attention_ref_jnp", us, f"{flops/us/1e3:.2f}GFLOP/s"))
+    us = _time(lambda: ops.flash_attention(q, k, v, interpret=True), n=1)
+    out.append(("flash_attention_pallas_interp", us,
+                f"{flops/us/1e3:.2f}GFLOP/s"))
+
+    # kmeans assign: N=8192 satellites, K=8, D=3
+    x = jax.random.normal(rng, (8192, 3))
+    c = jax.random.normal(jax.random.fold_in(rng, 4), (8, 3))
+    flops = 2 * 8192 * 8 * 3
+    us = _time(lambda: ref.kmeans_assign_ref(x, c))
+    out.append(("kmeans_assign_ref_jnp", us, f"{flops/us/1e3:.2f}GFLOP/s"))
+    us = _time(lambda: ops.kmeans_assign(x, c, interpret=True), n=2)
+    out.append(("kmeans_assign_pallas_interp", us,
+                f"{flops/us/1e3:.2f}GFLOP/s"))
+    return out
+
+
+def main():
+    print("name,us_per_call,derived")
+    for name, us, derived in rows():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

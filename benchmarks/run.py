@@ -1,0 +1,72 @@
+"""Benchmark driver: one section per paper table/figure + system benches.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Sections:
+  [kernels]    microbenchmark CSV (name,us_per_call,derived)
+  [clustering] §III-B PS-selection quality & energy mechanism
+  [fig3]       accuracy vs rounds (4 methods x K in {3,4,5} x 2 datasets)
+  [table1]     time/energy to target accuracy (Table I)
+  [roofline]   three-term roofline per (arch x shape) from the dry-run
+
+--fast runs a reduced fig3 grid (one K, mnist-like only) for CI-style runs.
+"""
+from __future__ import annotations
+
+import argparse
+import os
+
+
+def section(title):
+    print(f"\n===== [{title}] =====", flush=True)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true")
+    ap.add_argument("--skip-fl", action="store_true",
+                    help="skip the FL experiment grid (use cached results)")
+    args = ap.parse_args()
+    os.makedirs("results", exist_ok=True)
+
+    section("kernels")
+    from benchmarks import kernel_bench
+    kernel_bench.main()
+
+    section("clustering")
+    from benchmarks import clustering_bench
+    clustering_bench.main()
+
+    section("fig3-accuracy")
+    from benchmarks import fig3_accuracy, table1_time_energy
+    fig3_path = "results/fig3_accuracy.json"
+    if os.path.exists(fig3_path) and not args.fast:
+        # the full grid takes hours on 1 CPU core; reuse the cached run
+        # (delete results/fig3_accuracy.json or pass --fast to regenerate)
+        import json
+        results = json.load(open(fig3_path))
+        print(f"(cached: {fig3_path}, {len(results)} runs)")
+    elif args.fast:
+        import benchmarks.fl_common as C
+        C.KS = (4,)
+        results = fig3_accuracy.run(fig3_path, datasets=("mnist-like",))
+    else:
+        results = fig3_accuracy.run(fig3_path)
+    print(fig3_accuracy.summarize(results))
+
+    section("table1-time-energy")
+    table = table1_time_energy.run(fig3_path)
+    print(table1_time_energy.summarize(table))
+
+    section("roofline")
+    from benchmarks import roofline
+    path = "results/dryrun_single.jsonl"
+    if os.path.exists(path):
+        print(roofline.render(roofline.table(path)))
+    else:
+        print(f"(no {path}: run `python -m repro.launch.dryrun --all "
+              f"--mesh single --out {path}` first)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Paper Table I: total processing time (s, Eq. 7) and energy (J, Eq. 10)
+to reach the converged target accuracy (MNIST-like 80%, CIFAR-like 40%),
+per method x K.  Reads fig3's histories (same runs) so the grid is computed
+once."""
+from __future__ import annotations
+
+import json
+import os
+
+from benchmarks.fl_common import KS, METHODS, TARGET
+from repro.core.fedhc import time_energy_to_accuracy
+
+
+def run(fig3_path="results/fig3_accuracy.json",
+        out_path="results/table1_time_energy.json"):
+    if not os.path.exists(fig3_path):
+        from benchmarks import fig3_accuracy
+        fig3_accuracy.run(fig3_path)
+    with open(fig3_path) as f:
+        results = json.load(f)
+
+    table = {}
+    for key, h in results.items():
+        ds = key.split("/")[0]
+        t, e, r = time_energy_to_accuracy(h, TARGET[ds])
+        table[key] = {"time_s": t, "energy_j": e, "round": r,
+                      "target": TARGET[ds], "final_acc": h["acc"][-1]}
+    with open(out_path, "w") as f:
+        json.dump(table, f)
+    return table
+
+
+def summarize(table) -> str:
+    lines = ["dataset,K,method,time_s,energy_j,rounds_to_target,final_acc"]
+    for key in sorted(table):
+        ds, k, m = key.split("/")
+        r = table[key]
+        t = f"{r['time_s']:.0f}" if r["time_s"] != float("inf") else "inf"
+        e = f"{r['energy_j']:.0f}" if r["energy_j"] != float("inf") else "inf"
+        lines.append(f"{ds},{k[2:]},{m},{t},{e},{r['round']},"
+                     f"{r['final_acc']:.3f}")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(summarize(run()))

@@ -1,0 +1,49 @@
+"""Orbital mechanics + clustering demo: watch the constellation drift, the
+dropout rate build up (Alg. 1 line 15), and re-clustering restore short
+intra-cluster links.
+
+    PYTHONPATH=src python examples/constellation_demo.py
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering as cl
+from repro.orbits.constellation import Constellation, ground_station_position, visible
+from repro.orbits.links import LinkParams, rate_bps
+
+
+def main():
+    c = Constellation(num_planes=8, sats_per_plane=8)
+    lp = LinkParams()
+    rng = jax.random.PRNGKey(0)
+    k = 4
+    pos0 = c.positions(0.0)
+    res = cl.kmeans(pos0, k, rng)
+    assignment, centroids, ps = res.assignment, res.centroids, res.ps_index
+    print(f"constellation: {c.num_sats} sats @ {c.altitude_km:.0f} km, "
+          f"period {c.period_s/60:.1f} min; K={k} clusters "
+          f"(k-means converged in {int(res.iterations)} iters)")
+
+    gs = ground_station_position()
+    for minutes in (0, 10, 20, 30, 40):
+        t = minutes * 60.0
+        pos = c.positions(t)
+        nearest = cl.assign(pos, centroids)
+        d_r = cl.dropout_rate(nearest == assignment, assignment, k)
+        dist_ps = jnp.linalg.norm(pos - pos[ps][assignment], axis=-1)
+        rate = rate_bps(dist_ps, lp) / 1e6
+        vis = int(visible(pos[ps], ground_station_position(t_s=t)).sum())
+        print(f"t={minutes:3d}min  max dropout-rate={float(d_r.max()):.2f}  "
+              f"mean link {float(dist_ps.mean()):7.1f} km "
+              f"({float(rate.mean()):.2f} Mb/s)  PS visible to GS: {vis}/{k}")
+        if float(d_r.max()) > 0.5:
+            res = cl.kmeans(pos, k, jax.random.fold_in(rng, minutes))
+            assignment, centroids, ps = (res.assignment, res.centroids,
+                                         res.ps_index)
+            dist2 = jnp.linalg.norm(pos - pos[ps][assignment], axis=-1)
+            print(f"          -> RE-CLUSTERED: mean link "
+                  f"{float(dist_ps.mean()):7.1f} -> {float(dist2.mean()):7.1f} km")
+
+
+if __name__ == "__main__":
+    main()

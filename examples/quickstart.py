@@ -1,0 +1,33 @@
+"""Quickstart: hierarchical clustered FL (FedHC) on a simulated LEO
+constellation in ~a minute on CPU.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+Runs 30 FedHC rounds (16 satellites, K=3 clusters, LeNet on synthetic
+non-IID MNIST-like data), prints accuracy and the paper's Eq. 7/Eq. 10
+time/energy accounting, then compares against centralized C-FedAvg.
+"""
+from repro.core.fedhc import FLRunConfig, run_fl
+
+
+def main():
+    base = dict(num_clients=16, num_clusters=3, rounds=30, eval_every=10,
+                samples_per_client=64, local_steps=2, eval_size=512)
+
+    print("== FedHC (hierarchical clustered FL, satellite PS) ==")
+    h = run_fl(FLRunConfig(method="fedhc", **base), verbose=True)
+
+    print("\n== C-FedAvg (centralized baseline) ==")
+    c = run_fl(FLRunConfig(method="c-fedavg", **base), verbose=True)
+
+    print("\nsummary (30 rounds):")
+    print(f"  FedHC    acc={h['acc'][-1]:.3f} time={h['time_s'][-1]:8.0f}s "
+          f"energy={h['energy_j'][-1]:9.1f}J reclusters={h['reclusters']}")
+    print(f"  C-FedAvg acc={c['acc'][-1]:.3f} time={c['time_s'][-1]:8.0f}s "
+          f"energy={c['energy_j'][-1]:9.1f}J")
+    print(f"  -> FedHC uses {c['time_s'][-1]/h['time_s'][-1]:.1f}x less time, "
+          f"{c['energy_j'][-1]/h['energy_j'][-1]:.1f}x less energy")
+
+
+if __name__ == "__main__":
+    main()

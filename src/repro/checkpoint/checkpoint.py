@@ -1,0 +1,103 @@
+"""Pytree checkpointing: save/restore nested dict/tuple trees of arrays as a
+single .npz plus a JSON treedef — no external deps, sharding-aware restore
+(arrays can be restored with ``jax.device_put(..., sharding)`` via the
+``shardings`` argument).
+
+Keys are flattened paths ("layers/0/attn/wq"); tuples are encoded with
+integer path components, so round-tripping preserves structure exactly.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+_EXOTIC = {"bfloat16": np.uint16, "float8_e4m3fn": np.uint8,
+           "float8_e5m2": np.uint8}
+
+
+def _flatten(tree, prefix="", out=None):
+    out = {} if out is None else out
+    if isinstance(tree, dict):
+        for k in sorted(tree):
+            _flatten(tree[k], f"{prefix}{k}/", out)
+    elif isinstance(tree, (tuple, list)):
+        for i, v in enumerate(tree):
+            _flatten(v, f"{prefix}{i}/", out)
+    elif tree is None:
+        out[prefix[:-1] + "#none"] = np.zeros((0,))
+    else:
+        arr = np.asarray(tree)
+        if arr.dtype.name in _EXOTIC:     # npz can't store bf16/f8: view raw
+            arr = arr.view(_EXOTIC[arr.dtype.name])
+        out[prefix[:-1]] = arr
+    return out
+
+
+def _structure(tree):
+    if isinstance(tree, dict):
+        return {"__kind__": "dict",
+                "items": {k: _structure(v) for k, v in tree.items()}}
+    if isinstance(tree, tuple):
+        return {"__kind__": "tuple", "items": [_structure(v) for v in tree]}
+    if isinstance(tree, list):
+        return {"__kind__": "list", "items": [_structure(v) for v in tree]}
+    if tree is None:
+        return {"__kind__": "none"}
+    return {"__kind__": "leaf", "dtype": np.asarray(tree).dtype.name}
+
+
+def save(path: str, tree: Any, step: Optional[int] = None) -> None:
+    flat = _flatten(tree)
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    meta = {"structure": _structure(tree), "step": step}
+    np.savez(path if path.endswith(".npz") else path + ".npz", **flat)
+    with open(_meta_path(path), "w") as f:
+        json.dump(meta, f)
+
+
+def _meta_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".meta.json"
+
+
+def _rebuild(struct, flat, prefix="", shardings=None, sh_prefix=None):
+    kind = struct["__kind__"]
+    if kind == "dict":
+        return {k: _rebuild(v, flat, f"{prefix}{k}/",
+                            None if shardings is None else shardings.get(k),
+                            sh_prefix)
+                for k, v in struct["items"].items()}
+    if kind in ("tuple", "list"):
+        seq = [
+            _rebuild(v, flat, f"{prefix}{i}/",
+                     None if shardings is None else (
+                         shardings[i] if isinstance(shardings, (list, tuple))
+                         else None), sh_prefix)
+            for i, v in enumerate(struct["items"])]
+        return tuple(seq) if kind == "tuple" else seq
+    if kind == "none":
+        return None
+    arr = flat[prefix[:-1]]
+    want = struct.get("dtype")
+    if want and arr.dtype.name != want and want in _EXOTIC:
+        import ml_dtypes
+        arr = arr.view(getattr(ml_dtypes, want))
+    if shardings is not None and not isinstance(shardings, (dict, list, tuple)):
+        return jax.device_put(arr, shardings)
+    return arr
+
+
+def restore(path: str, shardings: Any = None):
+    """Returns (tree, step).  ``shardings`` may be a matching pytree of
+    jax.sharding.Sharding objects (or None to restore as numpy)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat = {k: npz[k] for k in npz.files}
+    with open(_meta_path(path)) as f:
+        meta = json.load(f)
+    tree = _rebuild(meta["structure"], flat, "", shardings)
+    return tree, meta.get("step")

@@ -1,0 +1,19 @@
+from repro.configs.archs import ARCH_NAMES, REGISTRY, get_config, POD_CLIENT_ARCHS
+from repro.configs.base import FLConfig, ModelConfig, TrainConfig, smoke_variant
+from repro.configs.runtime import RunProfile
+from repro.configs.shapes import SHAPES, InputShape, shape_applicable
+
+import importlib
+
+_PROFILE_MODULES = {
+    "gemma2-2b": "gemma2_2b", "grok-1-314b": "grok_1_314b",
+    "h2o-danube-1.8b": "h2o_danube_1_8b", "granite-3-8b": "granite_3_8b",
+    "whisper-large-v3": "whisper_large_v3", "pixtral-12b": "pixtral_12b",
+    "recurrentgemma-2b": "recurrentgemma_2b", "qwen2-72b": "qwen2_72b",
+    "mixtral-8x22b": "mixtral_8x22b", "mamba2-1.3b": "mamba2_1_3b",
+}
+
+
+def get_profile(name: str) -> RunProfile:
+    mod = importlib.import_module(f"repro.configs.{_PROFILE_MODULES[name]}")
+    return mod.PROFILE

@@ -1,0 +1,7 @@
+"""Arch config module: recurrentgemma-2b — selectable via --arch recurrentgemma-2b."""
+from repro.configs.archs import REGISTRY
+from repro.configs.runtime import RunProfile
+
+CONFIG = REGISTRY["recurrentgemma-2b"]
+PROFILE = RunProfile(arch="recurrentgemma-2b", client_axis="data", grad_accum=4,
+                     moe_dispatch="dense")

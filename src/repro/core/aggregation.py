@@ -1,0 +1,116 @@
+"""FedHC aggregation: loss-weighted intra-cluster (Eq. 5 + Eq. 12) and
+two-stage hierarchical (cluster -> ground-station) model averaging.
+
+Two implementations with identical semantics:
+
+* the **pytree path** (this module): params carry a leading ``clients`` dim;
+  segment ops over that dim.  Used by the CPU FL simulator and as the test
+  oracle.  Under ``jit`` with the clients dim sharded, XLA lowers the segment
+  ops to collectives automatically.
+* the **SPMD path** (`aggregation_spmd.py`): explicit
+  ``psum(axis_index_groups=clusters)`` inside ``shard_map`` — the paper's
+  two-level schedule stated directly as grouped collectives.  Used by the
+  production train step.
+
+`repro.kernels.weighted_agg` is the fused Pallas kernel for the stage-1
+weighted reduction.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_weighted_sum(stack, weights):
+    """stack: pytree with leading clients dim C; weights (C,) -> pytree."""
+    def one(x):
+        w = weights.astype(jnp.float32).reshape((-1,) + (1,) * (x.ndim - 1))
+        return jnp.sum(x.astype(jnp.float32) * w, axis=0).astype(x.dtype)
+    return jax.tree_util.tree_map(one, stack)
+
+
+def loss_weights(losses: jnp.ndarray, assignment: jnp.ndarray, k: int,
+                 participating: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Eq. 12: p_i = (1/L_i) / sum_{j in cluster(i)} (1/L_j), masked by
+    participation, normalized within each cluster.  Returns (C,)."""
+    inv = 1.0 / jnp.maximum(losses.astype(jnp.float32), 1e-8)
+    if participating is not None:
+        inv = inv * participating.astype(jnp.float32)
+    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)    # (C,K)
+    denom = one_hot.T @ inv                                       # (K,)
+    return inv / jnp.maximum(denom[assignment], 1e-12)
+
+
+def data_weights(data_sizes: jnp.ndarray,
+                 participating: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+    """Eq. 5 FedAvg weights: D_i / D (flat, no clusters)."""
+    d = data_sizes.astype(jnp.float32)
+    if participating is not None:
+        d = d * participating.astype(jnp.float32)
+    return d / jnp.maximum(jnp.sum(d), 1e-12)
+
+
+def cluster_aggregate(stack, weights: jnp.ndarray, assignment: jnp.ndarray,
+                      k: int):
+    """Stage 1: per-cluster weighted average.
+
+    stack: pytree (C, ...); weights (C,) already normalized per cluster
+    (e.g. from ``loss_weights``).  Returns pytree (K, ...) of cluster PS
+    models."""
+    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)    # (C,K)
+    wm = one_hot * weights.astype(jnp.float32)[:, None]           # (C,K)
+
+    def one(x):
+        flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
+        agg = wm.T @ flat                                         # (K, P)
+        return agg.reshape((k,) + x.shape[1:]).astype(x.dtype)
+    return jax.tree_util.tree_map(one, stack)
+
+
+def global_aggregate(cluster_stack, cluster_data_sizes: jnp.ndarray):
+    """Stage 2 (ground station, Alg. 1 line 23): w_G = sum_k (D_k/D) w^k."""
+    w = data_weights(cluster_data_sizes)
+    return tree_weighted_sum(cluster_stack, w)
+
+
+def broadcast_clusters(cluster_stack, assignment: jnp.ndarray):
+    """Distribute cluster models back to members: (K,...) -> (C,...)."""
+    return jax.tree_util.tree_map(lambda x: x[assignment], cluster_stack)
+
+
+def broadcast_global(tree, num_clients: int):
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (num_clients,) + x.shape), tree)
+
+
+def hierarchical_round(stack, losses, data_sizes, assignment, k,
+                       participating=None, *, do_global: bool,
+                       loss_weighted: bool = True):
+    """One full FedHC aggregation: stage-1 always; stage-2 when
+    ``do_global``.  Non-participating clients keep their local model for
+    stage-1 output weighting but receive the aggregate (they re-sync when
+    they rejoin, which matches the paper's broadcast step).
+
+    Returns the new (C, ...) client-model stack."""
+    C = losses.shape[0]
+    if loss_weighted:
+        w = loss_weights(losses, assignment, k, participating)
+    else:
+        # per-cluster FedAvg by data size
+        d = data_sizes.astype(jnp.float32)
+        if participating is not None:
+            d = d * participating.astype(jnp.float32)
+        one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+        denom = one_hot.T @ d
+        w = d / jnp.maximum(denom[assignment], 1e-12)
+
+    cluster_models = cluster_aggregate(stack, w, assignment, k)
+
+    if do_global:
+        one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+        dk = one_hot.T @ data_sizes.astype(jnp.float32)           # (K,)
+        g = global_aggregate(cluster_models, dk)
+        return broadcast_global(g, C)
+    return broadcast_clusters(cluster_models, assignment)

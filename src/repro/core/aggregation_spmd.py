@@ -1,0 +1,115 @@
+"""Explicit SPMD form of FedHC's two-stage aggregation.
+
+Inside ``shard_map`` over the client mesh axes, stage 1 is a *grouped*
+weighted all-reduce (``psum(..., axis_index_groups=clusters)``) — only
+intra-cluster links move data, matching the paper's satellite-cluster
+aggregation.  Stage 2 is the ground-station aggregation: one representative
+(the cluster PS) per cluster contributes its cluster model, weighted by the
+cluster's data size, to a full all-reduce.
+
+The cluster layout is *static* (it comes from host-side k-means over
+satellite positions via ``clustering.balanced_clusters``); re-clustering
+therefore recompiles — one compile per constellation epoch, amortized over
+thousands of steps.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+AxisNames = Union[str, Tuple[str, ...]]
+
+
+def _axis_index(axes: AxisNames):
+    if isinstance(axes, str):
+        return jax.lax.axis_index(axes)
+    idx = jnp.int32(0)
+    for a in axes:
+        idx = idx * jax.lax.axis_size(a) + jax.lax.axis_index(a)
+    return idx
+
+
+def _psum(x, axes: AxisNames, groups=None):
+    return jax.lax.psum(x, axes, axis_index_groups=groups)
+
+
+def hierarchical_agg_shard(local_params, inv_loss, data_size, do_global,
+                           *, axes: AxisNames, clusters: Tuple[Tuple[int, ...], ...]):
+    """Body to run inside shard_map.
+
+    local_params: this client's model pytree (no clients dim).
+    inv_loss:     scalar 1/L_i (Eq. 12 numerator), f32.
+    data_size:    scalar |D_i|, f32.
+    do_global:    replicated bool scalar — ground-station round?
+
+    Returns this client's new model.
+    """
+    groups = [list(g) for g in clusters]
+    k = len(groups)
+
+    # ---- stage 1: intra-cluster loss-weighted average (Eq. 5 + Eq. 12) ----
+    w = inv_loss.astype(jnp.float32)
+    num = jax.tree_util.tree_map(
+        lambda x: _psum(x.astype(jnp.float32) * w, axes, groups), local_params)
+    den = _psum(w, axes, groups)
+    cluster_model = jax.tree_util.tree_map(
+        lambda x: x / jnp.maximum(den, 1e-12), num)
+
+    # cluster data size D_k (Eq. 5 stage-2 weights)
+    dk = _psum(data_size.astype(jnp.float32), axes, groups)
+
+    # ---- stage 2: ground-station aggregation across cluster PS ----------
+    my_idx = _axis_index(axes)
+    # representative (PS) = first member of each cluster group
+    reps = jnp.asarray([g[0] for g in groups], jnp.int32)
+    is_rep = jnp.any(my_idx == reps)
+
+    def ground(_):
+        contrib = jax.tree_util.tree_map(
+            lambda x: jnp.where(is_rep, x * dk, jnp.zeros_like(x)),
+            cluster_model)
+        gsum = jax.tree_util.tree_map(lambda x: _psum(x, axes), contrib)
+        dtot = _psum(jnp.where(is_rep, dk, 0.0), axes)
+        return jax.tree_util.tree_map(lambda x: x / jnp.maximum(dtot, 1e-12),
+                                      gsum)
+
+    def keep(_):
+        return cluster_model
+
+    out = jax.lax.cond(do_global, ground, keep, operand=None)
+    return jax.tree_util.tree_map(
+        lambda x, ref: x.astype(ref.dtype), out, local_params)
+
+
+def make_spmd_aggregator(mesh, client_axes: AxisNames,
+                         clusters: Tuple[Tuple[int, ...], ...],
+                         param_specs):
+    """Build a jit-able aggregator over a stacked client-model pytree.
+
+    param_specs: pytree of PartitionSpec for the *stacked* params (leading
+    clients dim sharded over ``client_axes``).
+    """
+    from jax.experimental.shard_map import shard_map
+
+    axes_tuple = (client_axes,) if isinstance(client_axes, str) else client_axes
+    scalar_spec = P(client_axes)
+
+    def body(stack, inv_loss, data_size, do_global):
+        # inside shard_map the leading clients dim is locally 1
+        local = jax.tree_util.tree_map(lambda x: x[0], stack)
+        out = hierarchical_agg_shard(
+            local, inv_loss[0], data_size[0], do_global,
+            axes=client_axes, clusters=clusters)
+        return jax.tree_util.tree_map(lambda x: x[None], out)
+
+    fn = shard_map(body, mesh=mesh,
+                   in_specs=(param_specs, scalar_spec, scalar_spec, P()),
+                   out_specs=param_specs,
+                   check_rep=False)  # psum(axis_index_groups) has no
+    #                                  replication rule; semantics verified
+    #                                  against the pytree oracle in tests
+    return fn

@@ -1,0 +1,111 @@
+"""Satellite-clustered parameter-server selection (paper §III-B).
+
+k-means over satellite position vectors (Eq. 13 Euclidean assignment,
+Eq. 14 centroid update, Eq. 15 convergence test); the satellite nearest each
+centroid is designated that cluster's PS.
+
+Pure-jnp, jit-able: fixed iteration count with a convergence mask (once the
+Eq. 15 criterion fires, centroids stop moving — same fixed-point as early
+exit but keeps the computation a static-shape scan).  The assignment step
+has a Pallas kernel (`repro.kernels.kmeans_assign`) for large constellations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ClusterResult(NamedTuple):
+    centroids: jnp.ndarray     # (K, dims)
+    assignment: jnp.ndarray    # (N,) int32 cluster id per satellite
+    ps_index: jnp.ndarray      # (K,) int32 satellite index chosen as PS
+    iterations: jnp.ndarray    # () int32 iterations until Eq. 15 fired
+
+
+def pairwise_sq_dist(x: jnp.ndarray, c: jnp.ndarray) -> jnp.ndarray:
+    """Eq. 13 (squared): x (N,D), c (K,D) -> (N,K)."""
+    return (jnp.sum(x * x, -1)[:, None] - 2.0 * x @ c.T
+            + jnp.sum(c * c, -1)[None, :])
+
+
+def assign(x: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
+    return jnp.argmin(pairwise_sq_dist(x, centroids), axis=1).astype(jnp.int32)
+
+
+def _update_centroids(x, assignment, centroids):
+    """Eq. 14; empty clusters keep their previous centroid."""
+    K = centroids.shape[0]
+    one_hot = jax.nn.one_hot(assignment, K, dtype=x.dtype)        # (N,K)
+    counts = one_hot.sum(0)                                       # (K,)
+    sums = one_hot.T @ x                                          # (K,D)
+    new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None],
+                    centroids)
+    return new
+
+
+@functools.partial(jax.jit, static_argnames=("k", "iters"))
+def kmeans(positions: jnp.ndarray, k: int, rng: jax.Array,
+           iters: int = 32, tol: float = 1e-4) -> ClusterResult:
+    """positions (N, D) -> ClusterResult.  Initial centroids are k random
+    satellites (paper: 'K centroids are randomly selected from the satellite
+    location data')."""
+    n = positions.shape[0]
+    init_idx = jax.random.choice(rng, n, (k,), replace=False)
+    c0 = positions[init_idx]
+
+    def step(carry, _):
+        c, done, it = carry
+        a = assign(positions, c)
+        c_new = _update_centroids(positions, a, c)
+        shift = jnp.sum(jnp.square(c_new - c))                    # Eq. 15
+        newly_done = shift < tol
+        c_out = jnp.where(done, c, c_new)
+        it = it + jnp.where(done, 0, 1)
+        return (c_out, done | newly_done, it), None
+
+    (c, _, it), _ = jax.lax.scan(step, (c0, jnp.bool_(False), jnp.int32(0)),
+                                 None, length=iters)
+    a = assign(positions, c)
+    # PS selection: satellite nearest its cluster centroid
+    d = pairwise_sq_dist(positions, c)                            # (N,K)
+    same = jax.nn.one_hot(a, k, dtype=bool).T                     # (K,N)
+    masked = jnp.where(same, d.T, jnp.inf)
+    ps = jnp.argmin(masked, axis=1).astype(jnp.int32)             # (K,)
+    return ClusterResult(c, a, ps, it)
+
+
+def balanced_clusters(assignment: jnp.ndarray, k: int, cap: int) -> jnp.ndarray:
+    """Host helper: convert a k-means assignment into *static* equal-size
+    groups (size = cap) for ``psum(axis_index_groups=...)``.
+
+    Greedy: each cluster keeps its nearest members up to cap; spill goes to
+    the least-full cluster.  Used by the launcher to translate geometry into
+    a legal static collective schedule."""
+    import numpy as np
+    a = np.asarray(assignment)
+    n = a.shape[0]
+    assert n == k * cap, (n, k, cap)
+    groups = [[] for _ in range(k)]
+    spill = []
+    for i in range(n):
+        c = int(a[i])
+        if 0 <= c < k and len(groups[c]) < cap:
+            groups[c].append(i)
+        else:
+            spill.append(i)
+    for i in spill:
+        tgt = min(range(k), key=lambda j: len(groups[j]))
+        groups[tgt].append(i)
+    return np.array(groups, dtype=np.int32)
+
+
+def dropout_rate(participating: jnp.ndarray, assignment: jnp.ndarray,
+                 k: int) -> jnp.ndarray:
+    """Alg. 1 line 15: d_r = C^d / C^k per cluster.  participating (N,) bool."""
+    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+    total = one_hot.sum(0)
+    dropped = (one_hot * (~participating).astype(jnp.float32)[:, None]).sum(0)
+    return dropped / jnp.maximum(total, 1.0)

@@ -1,0 +1,304 @@
+"""FedHC simulation driver — Algorithm 1 end-to-end, plus the three
+comparative methods (C-FedAvg, H-BASE, FedCE) on the same substrate.
+
+The driver couples:
+  * the LeNet FL workload (paper §IV-A) on synthetic non-IID data,
+  * the orbital simulator (positions -> visibility/dropout -> link rates),
+  * the two-stage aggregation (core/aggregation.py),
+  * MAML re-clustering (core/maml.py),
+  * the Eq. 7-10 time/energy accounting (orbits/cost.py).
+
+Methods:
+  fedhc        : position k-means clusters + PS selection, loss-weighted
+                 stage-1, stage-2 every m rounds, MAML on re-cluster.
+  fedhc-nomaml : ablation — re-clusters but new members copy the cluster
+                 model cold.
+  h-base       : random static clusters, data-size weights, no re-cluster.
+  fedce        : clusters on label-distribution (Dirichlet mixture) space,
+                 data-size weights, no MAML.
+  c-fedavg     : centralized — raw data to one satellite server (K=1).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import clustering as cl
+from repro.core import maml as maml_lib
+from repro.data.synthetic import (DatasetSpec, MNIST_LIKE, client_batches,
+                                  dirichlet_partition, make_split)
+from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
+from repro.orbits import cost as cost_lib
+from repro.orbits.constellation import Constellation, ground_station_position
+from repro.orbits.links import LinkParams
+
+METHODS = ("fedhc", "fedhc-nomaml", "h-base", "fedce", "c-fedavg")
+
+
+@dataclass(frozen=True)
+class FLRunConfig:
+    method: str = "fedhc"
+    num_clients: int = 64
+    num_clusters: int = 4                 # K
+    rounds: int = 150
+    rounds_per_global: int = 5            # m
+    local_steps: int = 2                  # SGD steps per round (lambda)
+    batch_size: int = 64
+    lr: float = 0.01
+    dropout_threshold: float = 0.5        # Z
+    maml_alpha: float = 1e-3
+    maml_beta: float = 1e-3
+    dataset: DatasetSpec = MNIST_LIKE
+    samples_per_client: int = 128
+    dirichlet_alpha: float = 0.5
+    eval_every: int = 5
+    eval_size: int = 1024
+    seed: int = 0
+    round_minutes: float = 1.0            # orbital time advanced per round
+
+
+# --------------------------------------------------------------------------
+
+
+def _local_train(params_stack, images, labels, lr, steps):
+    """vmap over clients: `steps` SGD steps each.  Returns (params, loss)."""
+
+    def one_client(p, imgs, labs):
+        def body(p, _):
+            l, g = jax.value_and_grad(lenet_loss)(p, (imgs, labs))
+            p = jax.tree_util.tree_map(lambda a, b: a - lr * b, p, g)
+            return p, l
+        p, losses = jax.lax.scan(body, p, None, length=steps)
+        return p, losses[-1]
+
+    return jax.vmap(one_client)(params_stack, images, labels)
+
+
+def _meta_update_clusters(cluster_models, assignment, images, labels, *,
+                          k, alpha, beta):
+    """Eq. 16-17 per cluster: inner-adapt each member's copy of its cluster
+    model on its own batch, outer-update the cluster model with the summed
+    post-adaptation gradients (membership-masked)."""
+
+    def task_grad(model, imgs, labs):
+        adapted = maml_lib.inner_adapt(lenet_loss, model, (imgs, labs), alpha)
+        return jax.grad(lenet_loss)(adapted, (imgs, labs))
+
+    member_models = agg.broadcast_clusters(cluster_models, assignment)
+    grads = jax.vmap(task_grad)(member_models, images, labels)      # (C,...)
+    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)      # (C,K)
+
+    def per_cluster(g):
+        flat = g.reshape(g.shape[0], -1)
+        summed = one_hot.T @ flat                                   # (K,P)
+        return summed.reshape((k,) + g.shape[1:])
+
+    cluster_grads = jax.tree_util.tree_map(per_cluster, grads)
+    return jax.tree_util.tree_map(lambda m, g: m - beta * g,
+                                  cluster_models, cluster_grads)
+
+
+# --------------------------------------------------------------------------
+
+
+def run_fl(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
+    assert cfg.method in METHODS, cfg.method
+    rng = jax.random.PRNGKey(cfg.seed)
+    r_data, r_part, r_model, r_freq, r_kmeans, r_loop = jax.random.split(rng, 6)
+
+    # ---- data ------------------------------------------------------------
+    n_total = cfg.num_clients * cfg.samples_per_client
+    (images, labels), (test_x, test_y) = make_split(
+        r_data, cfg.dataset, n_total, cfg.eval_size)
+    client_idx = dirichlet_partition(r_part, labels, cfg.num_clients,
+                                     cfg.dirichlet_alpha,
+                                     cfg.samples_per_client)
+    data_sizes = jnp.full((cfg.num_clients,), cfg.samples_per_client,
+                          jnp.float32)
+
+    # ---- models ----------------------------------------------------------
+    w0 = init_lenet(r_model, cfg.dataset.channels, cfg.dataset.img,
+                    cfg.dataset.num_classes)
+    params_stack = agg.broadcast_global(w0, cfg.num_clients)
+    model_bits = sum(x.size for x in jax.tree_util.tree_leaves(w0)) * 32.0
+    sample_bits = cfg.dataset.img ** 2 * cfg.dataset.channels * 32.0
+
+    # ---- orbital setup -----------------------------------------------------
+    planes = int(math.sqrt(cfg.num_clients))
+    while cfg.num_clients % planes:
+        planes -= 1
+    constellation = Constellation(num_planes=planes,
+                                  sats_per_plane=cfg.num_clients // planes)
+    gs0 = ground_station_position(t_s=0.0)
+    lp, cp = LinkParams(), cost_lib.ComputeParams()
+    freqs = cost_lib.sample_freqs(r_freq, cfg.num_clients, cp)
+
+    # ---- clustering -------------------------------------------------------
+    k = 1 if cfg.method == "c-fedavg" else cfg.num_clusters
+    pos0 = constellation.positions(0.0)
+    if cfg.method in ("fedhc", "fedhc-nomaml"):
+        res = cl.kmeans(pos0, k, r_kmeans)
+        assignment, centroids = res.assignment, res.centroids
+    elif cfg.method == "fedce":
+        # cluster on label-distribution space (client class histograms)
+        hists = jax.vmap(lambda idx: jnp.bincount(
+            labels[idx], length=cfg.dataset.num_classes))(client_idx)
+        hists = hists / cfg.samples_per_client
+        res = cl.kmeans(hists.astype(jnp.float32), k, r_kmeans)
+        assignment = res.assignment
+        centroids = cl._update_centroids(pos0, assignment,
+                                         pos0[res.ps_index])
+    elif cfg.method == "h-base":
+        assignment = jax.random.randint(r_kmeans, (cfg.num_clients,), 0, k
+                                        ).astype(jnp.int32)
+        centroids = cl._update_centroids(pos0, assignment, pos0[:k])
+    else:  # c-fedavg
+        assignment = jnp.zeros((cfg.num_clients,), jnp.int32)
+        centroids = pos0.mean(0, keepdims=True)
+
+    def ps_of(positions, centroids, assignment):
+        d = cl.pairwise_sq_dist(positions, centroids)
+        same = jax.nn.one_hot(assignment, k, dtype=bool).T
+        return jnp.argmin(jnp.where(same, d.T, jnp.inf), axis=1).astype(jnp.int32)
+
+    ps_index = ps_of(pos0, centroids, assignment)
+
+    # ---- jitted round pieces ----------------------------------------------
+    local_train = jax.jit(functools.partial(_local_train, lr=cfg.lr,
+                                            steps=cfg.local_steps))
+    eval_acc = jax.jit(lenet_accuracy)
+    hier_round = jax.jit(functools.partial(
+        agg.hierarchical_round, k=k,
+        loss_weighted=cfg.method in ("fedhc", "fedhc-nomaml")),
+        static_argnames=("do_global",))
+    meta_update = jax.jit(functools.partial(
+        _meta_update_clusters, k=k, alpha=cfg.maml_alpha, beta=cfg.maml_beta))
+    member_adapt = jax.jit(lambda models, imgs, labs: jax.vmap(
+        lambda m, i, l: maml_lib.inner_adapt(lenet_loss, m, (i, l),
+                                             cfg.maml_alpha))(
+        models, imgs, labs))
+    cluster_costs = jax.jit(functools.partial(
+        cost_lib.cluster_round_costs, model_bits=model_bits, lp=lp, cp=cp))
+    ground_costs = jax.jit(functools.partial(
+        cost_lib.ground_round_costs, model_bits=model_bits, lp=lp))
+    cfedavg_costs = jax.jit(functools.partial(
+        cost_lib.cfedavg_round_costs, sample_bits=sample_bits,
+        server_freq_hz=cp.max_freq_hz, lp=lp, cp=cp))
+
+    history = {"round": [], "acc": [], "loss": [], "time_s": [],
+               "energy_j": [], "reclusters": 0}
+    t_sim, e_sim = 0.0, 0.0
+    centralized = w0 if cfg.method == "c-fedavg" else None
+
+    for rnd in range(cfg.rounds):
+        r_rnd = jax.random.fold_in(r_loop, rnd)
+        positions = constellation.positions(t_sim)
+        gs = ground_station_position(t_s=t_sim)
+        do_global = (rnd + 1) % cfg.rounds_per_global == 0
+
+        imgs, labs = client_batches(images, labels, client_idx, r_rnd,
+                                    cfg.batch_size)
+
+        if cfg.method == "c-fedavg":
+            # centralized: the server performs all clients' steps serially
+            for s in range(cfg.local_steps):
+                b = jax.random.fold_in(r_rnd, s)
+                picks = jax.random.randint(b, (cfg.batch_size,), 0, n_total)
+                l, g = jax.value_and_grad(lenet_loss)(
+                    centralized, (images[picks], labels[picks]))
+                centralized = jax.tree_util.tree_map(
+                    lambda a, gg: a - cfg.lr * gg, centralized, g)
+            participating = jnp.ones((cfg.num_clients,), bool)
+            server_pos = positions[int(ps_index[0])]
+            t_r, e_r = cfedavg_costs(positions, server_pos, participating,
+                                     data_sizes, freqs)
+            # server does C*local_steps minibatches, clients none
+            loss_val = float(l)
+        else:
+            # Every satellite trains every round.  Geometry drift shows up
+            # as (a) longer links to the (stale) cluster PS — more time and
+            # energy — and (b) the dropout-rate trigger: a satellite whose
+            # nearest centroid changed has "left" its cluster (Alg. 1).
+            nearest = cl.assign(positions, centroids)
+            in_region = nearest == assignment
+            participating = jnp.ones_like(in_region)
+
+            params_stack, losses = local_train(params_stack, imgs, labs)
+            params_stack = hier_round(params_stack, losses, data_sizes,
+                                      assignment,
+                                      participating=participating,
+                                      do_global=bool(do_global))
+            loss_val = float(jnp.mean(losses))
+
+            ps_positions = positions[ps_index][assignment]
+            t_r, e_r = cluster_costs(positions, ps_positions, assignment,
+                                     participating, data_sizes, freqs)
+            if do_global:
+                t_g, e_g = ground_costs(positions[ps_index], gs)
+                t_r, e_r = t_r + t_g, e_r + e_g
+
+            # ---- re-cluster check (Alg. 1 lines 14-18) -------------------
+            if cfg.method in ("fedhc", "fedhc-nomaml") and do_global:
+                d_r = cl.dropout_rate(in_region, assignment, k)
+                if float(jnp.max(d_r)) > cfg.dropout_threshold:
+                    history["reclusters"] += 1
+                    res = cl.kmeans(positions, k,
+                                    jax.random.fold_in(r_kmeans, rnd))
+                    new_assignment, centroids = res.assignment, res.centroids
+                    ps_index = res.ps_index
+                    cluster_models = agg.cluster_aggregate(
+                        params_stack,
+                        agg.loss_weights(losses, new_assignment, k),
+                        new_assignment, k)
+                    if cfg.method == "fedhc":
+                        cluster_models = meta_update(
+                            cluster_models, new_assignment, imgs, labs)
+                    changed = new_assignment != assignment
+                    inherited = agg.broadcast_clusters(cluster_models,
+                                                       new_assignment)
+                    if cfg.method == "fedhc":
+                        # each joining member takes MAML inner steps on its
+                        # own data from the meta-updated cluster model
+                        inherited = member_adapt(inherited, imgs, labs)
+                    params_stack = jax.tree_util.tree_map(
+                        lambda inh, old: jnp.where(
+                            changed.reshape((-1,) + (1,) * (inh.ndim - 1)),
+                            inh, old), inherited, params_stack)
+                    assignment = new_assignment
+
+        t_sim += float(t_r) + cfg.round_minutes * 60.0
+        e_sim += float(e_r)
+
+        if (rnd + 1) % cfg.eval_every == 0 or rnd == cfg.rounds - 1:
+            if cfg.method == "c-fedavg":
+                global_model = centralized
+            else:
+                global_model = jax.tree_util.tree_map(
+                    lambda x: jnp.mean(x.astype(jnp.float32), 0), params_stack)
+            acc = float(eval_acc(global_model, test_x, test_y))
+            history["round"].append(rnd + 1)
+            history["acc"].append(acc)
+            history["loss"].append(loss_val)
+            history["time_s"].append(t_sim)
+            history["energy_j"].append(e_sim)
+            if verbose:
+                print(f"[{cfg.method} K={k}] round {rnd+1:4d} "
+                      f"acc={acc:.3f} loss={loss_val:.3f} "
+                      f"T={t_sim:.0f}s E={e_sim:.1f}J")
+    return history
+
+
+def time_energy_to_accuracy(history: Dict[str, list], target: float):
+    """First (time, energy) at which accuracy >= target, else (inf, inf)."""
+    for r, a, t, e in zip(history["round"], history["acc"],
+                          history["time_s"], history["energy_j"]):
+        if a >= target:
+            return t, e, r
+    return float("inf"), float("inf"), -1

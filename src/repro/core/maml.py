@@ -1,0 +1,64 @@
+"""Meta-learning-driven re-clustering adaptation (paper §III-C).
+
+MAML over satellite tasks: inner-loop adaptation (Eq. 16)
+``w'_i = w - alpha * grad L_i(w)`` and outer meta-update (Eq. 17)
+``w <- w - beta * sum_i grad_w L_i(w'_i)``.
+
+``meta_step`` differentiates *through* the inner update (exact MAML);
+``first_order=True`` gives the FOMAML approximation (stop-gradient on the
+inner step).  ``adapt`` is the deployment-side routine a newly joined
+satellite runs: a few inner steps from the meta-initialization.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def sgd_tree(params, grads, lr):
+    return jax.tree_util.tree_map(lambda p, g: p - lr * g.astype(p.dtype),
+                                  params, grads)
+
+
+def inner_adapt(loss_fn: Callable, params, batch, alpha: float,
+                steps: int = 1, first_order: bool = False):
+    """Eq. 16, ``steps`` times.  loss_fn(params, batch) -> scalar."""
+    for _ in range(steps):
+        g = jax.grad(loss_fn)(params, batch)
+        if first_order:
+            g = jax.lax.stop_gradient(g)
+        params = sgd_tree(params, g, alpha)
+    return params
+
+
+def meta_step(loss_fn: Callable, params, support_batches, query_batches,
+              alpha: float, beta: float, inner_steps: int = 1,
+              first_order: bool = False):
+    """Eq. 17 over a batch of tasks.
+
+    support_batches/query_batches: pytrees with a leading task dim (vmapped).
+    Returns (new meta-params, mean post-adaptation query loss)."""
+
+    def task_loss(p, support, query):
+        p_adapted = inner_adapt(loss_fn, p, support, alpha, inner_steps,
+                                first_order)
+        return loss_fn(p_adapted, query)
+
+    def mean_task_loss(p):
+        losses = jax.vmap(lambda s, q: task_loss(p, s, q))(
+            support_batches, query_batches)
+        return jnp.mean(losses)
+
+    loss, g = jax.value_and_grad(mean_task_loss)(params)
+    return sgd_tree(params, g, beta), loss
+
+
+def adapt_new_member(loss_fn: Callable, cluster_model, local_batch,
+                     alpha: float, steps: int = 2):
+    """What a satellite that just joined a cluster runs: start from the
+    cluster head's model ('inherits model updates from the head node') and
+    take one-two inner steps on its own data (§III-C)."""
+    return inner_adapt(loss_fn, cluster_model, local_batch, alpha, steps)

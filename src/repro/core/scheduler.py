@@ -1,0 +1,51 @@
+"""Visibility-gated aggregation scheduler (paper §II-A: ground stations see
+satellites only inside elevation windows).
+
+Decides, per round, whether the ground-station stage (stage-2) can fire:
+it requires at least one cluster PS visible from a ground station at the
+current orbital time.  Intra-cluster stage-1 is always allowed (ISLs).
+
+The production launcher uses this to set the ``do_global`` flag fed to the
+compiled train step; the FL simulator uses it to time ground aggregation.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax.numpy as jnp
+
+from repro.orbits.constellation import (Constellation,
+                                        ground_station_position, visible)
+
+
+@dataclass(frozen=True)
+class Schedule:
+    rounds_per_global: int = 5      # m: desired ground-station cadence
+    min_elevation_deg: float = 10.0
+
+
+def ground_stage_allowed(constellation: Constellation, t_s: float,
+                         ps_indices, gs_lat: float = 30.0,
+                         gs_lon: float = 114.0,
+                         min_elevation_deg: float = 10.0) -> jnp.ndarray:
+    """True iff any cluster PS is visible from the ground station at t."""
+    pos = constellation.positions(t_s)[jnp.asarray(ps_indices)]
+    gs = ground_station_position(gs_lat, gs_lon, t_s)
+    return jnp.any(visible(pos, gs, min_elevation_deg))
+
+
+def should_aggregate_globally(sch: Schedule, round_idx: int,
+                              constellation: Constellation, t_s: float,
+                              ps_indices) -> Tuple[bool, bool]:
+    """Returns (due, fired): ``due`` = cadence says aggregate this round;
+    ``fired`` = due AND a PS is visible.  When due-but-not-visible the
+    launcher defers to the next visible round (the paper's 'ground station
+    can connect at least one satellite cluster' assumption makes this rare).
+    """
+    due = (round_idx + 1) % sch.rounds_per_global == 0
+    if not due:
+        return False, False
+    vis = bool(ground_stage_allowed(constellation, t_s, ps_indices,
+                                    min_elevation_deg=sch.min_elevation_deg))
+    return True, vis

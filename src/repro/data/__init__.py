@@ -1,0 +1,3 @@
+from repro.data.synthetic import (CIFAR_LIKE, MNIST_LIKE, DatasetSpec,
+                                  client_batches, dirichlet_partition,
+                                  make_dataset)

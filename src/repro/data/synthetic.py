@@ -1,0 +1,104 @@
+"""Synthetic federated datasets with MNIST / CIFAR-10 geometry.
+
+Real datasets are not downloadable in this offline container; we generate
+class-conditional Gaussian-mixture images that a LeNet can actually learn
+(each class = a smooth random template + per-sample deformation + noise),
+then split them across clients with a Dirichlet non-IID partition — the
+standard FL heterogeneity protocol.
+
+The FL experiments validate the paper's *relative* claims on these
+distributions (see DESIGN.md §7).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class DatasetSpec:
+    name: str = "mnist-like"
+    img: int = 28
+    channels: int = 1
+    num_classes: int = 10
+    template_scale: float = 2.0
+    noise_scale: float = 0.6
+
+
+# difficulty calibrated so centralized LeNet/SGD reaches ~80% (mnist-like)
+# in a few hundred steps and ~40-60% (cifar-like) — mirroring the paper's
+# target-accuracy thresholds (MNIST 80%, CIFAR-10 40%).
+MNIST_LIKE = DatasetSpec("mnist-like", 28, 1, 10, template_scale=0.6,
+                         noise_scale=1.5)
+CIFAR_LIKE = DatasetSpec("cifar-like", 32, 3, 10, template_scale=0.45,
+                         noise_scale=2.2)
+
+
+def _smooth(rng, shape, img):
+    """Low-frequency random field: upsampled coarse noise."""
+    coarse = jax.random.normal(rng, shape[:-3] + (7, 7, shape[-1]))
+    return jax.image.resize(coarse, shape[:-3] + (img, img, shape[-1]),
+                            method="bilinear")
+
+
+def make_dataset(rng, spec: DatasetSpec, n: int) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (images (n, img, img, C), labels (n,))."""
+    r_t, r_lab, r_def, r_noise = jax.random.split(rng, 4)
+    templates = _smooth(r_t, (spec.num_classes, spec.img, spec.img,
+                              spec.channels), spec.img) * spec.template_scale
+    labels = jax.random.randint(r_lab, (n,), 0, spec.num_classes)
+    deform = _smooth(r_def, (n, spec.img, spec.img, spec.channels),
+                     spec.img) * 0.5
+    noise = jax.random.normal(r_noise, (n, spec.img, spec.img,
+                                        spec.channels)) * spec.noise_scale
+    images = templates[labels] + deform + noise
+    return images.astype(jnp.float32), labels.astype(jnp.int32)
+
+
+def make_split(rng, spec: DatasetSpec, n_train: int, n_test: int):
+    """One generation (shared class templates), split into train/test."""
+    x, y = make_dataset(rng, spec, n_train + n_test)
+    return (x[:n_train], y[:n_train]), (x[n_train:], y[n_train:])
+
+
+def dirichlet_partition(rng, labels: jnp.ndarray, num_clients: int,
+                        alpha: float = 0.5, samples_per_client: int = 128
+                        ) -> jnp.ndarray:
+    """Non-IID split: per-client class mixture ~ Dirichlet(alpha).
+
+    Returns client_indices (num_clients, samples_per_client) int32 indices
+    into the dataset (fixed-size per client; sampled with replacement from
+    the client's class mixture so shapes stay static)."""
+    num_classes = int(jnp.max(labels)) + 1
+    r_mix, r_pick = jax.random.split(rng)
+    mix = jax.random.dirichlet(r_mix, jnp.full((num_classes,), alpha),
+                               (num_clients,))                       # (C,cls)
+    # sample a class per slot, then a random example of that class
+    cls = jax.vmap(lambda r, p: jax.random.choice(
+        r, num_classes, (samples_per_client,), p=p))(
+        jax.random.split(r_pick, num_clients), mix)                  # (C,S)
+
+    # index lookup: for each class, the example indices (padded)
+    n = labels.shape[0]
+    order = jnp.argsort(labels)
+    sorted_labels = labels[order]
+    starts = jnp.searchsorted(sorted_labels, jnp.arange(num_classes))
+    counts = jnp.searchsorted(sorted_labels, jnp.arange(num_classes),
+                              side="right") - starts
+
+    r_off = jax.random.split(jax.random.fold_in(r_pick, 1), num_clients)
+    offs = jax.vmap(lambda r: jax.random.uniform(r, (samples_per_client,)))(
+        r_off)
+    idx_in_class = (offs * counts[cls]).astype(jnp.int32)
+    return order[starts[cls] + idx_in_class].astype(jnp.int32)
+
+
+def client_batches(images, labels, client_idx, rng, batch_size: int):
+    """Sample one minibatch per client: returns ((C,B,H,W,ch), (C,B))."""
+    num_clients, spc = client_idx.shape
+    picks = jax.random.randint(rng, (num_clients, batch_size), 0, spc)
+    flat = jnp.take_along_axis(client_idx, picks, axis=1)            # (C,B)
+    return images[flat], labels[flat]

@@ -1,0 +1,65 @@
+"""Pallas TPU kernel: k-means assignment (Eq. 13 distance + argmin).
+
+At constellation scale (10^4-10^5 satellites x K centroids) the assignment
+step is a dense (N, D) x (D, K) distance matmul — MXU work.  Grid over N
+tiles; centroids stay VMEM-resident across the whole grid (they are a few
+KiB).  D and K are padded to lane/sublane multiples in the wrapper; padded
+centroids are masked to +inf distance inside the kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_N = 512
+
+
+def _kernel(x_ref, c_ref, a_ref, d_ref, *, k_actual: int):
+    x = x_ref[...].astype(jnp.float32)                   # (bn, Dp)
+    c = c_ref[...].astype(jnp.float32)                   # (Kp, Dp)
+    d = (jnp.sum(x * x, 1, keepdims=True)
+         - 2.0 * jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
+                                     preferred_element_type=jnp.float32)
+         + jnp.sum(c * c, 1)[None, :])                   # (bn, Kp)
+    kp = c.shape[0]
+    valid = jax.lax.broadcasted_iota(jnp.int32, d.shape, 1) < k_actual
+    d = jnp.where(valid, d, jnp.inf)
+    a_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    d_ref[...] = jnp.min(d, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_n"))
+def kmeans_assign(x: jnp.ndarray, centroids: jnp.ndarray, *,
+                  interpret: bool = True, block_n: int = BLOCK_N):
+    """x (N, D), centroids (K, D) -> (assignment (N,) i32, sq_dist (N,) f32)."""
+    N, D = x.shape
+    K = centroids.shape[0]
+    Dp = max(8, (D + 127) // 128 * 128) if D > 8 else 8
+    Kp = (K + 7) // 8 * 8
+    block_n = min(block_n, max(8, N))
+    pn = (-N) % block_n
+    xp = jnp.pad(x, ((0, pn), (0, Dp - D)))
+    cp = jnp.pad(centroids, ((0, Kp - K), (0, Dp - D)))
+    Np = N + pn
+
+    a, d = pl.pallas_call(
+        functools.partial(_kernel, k_actual=K),
+        grid=(Np // block_n,),
+        in_specs=[
+            pl.BlockSpec((block_n, Dp), lambda i: (i, 0)),
+            pl.BlockSpec((Kp, Dp), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+            pl.BlockSpec((block_n,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xp, cp)
+    return a[:N], d[:N]

@@ -1,0 +1,40 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+``interpret`` defaults to True off-TPU (this container is CPU-only; the
+kernels execute their bodies in Python via the Pallas interpreter, which is
+the validation mode) and False on real TPU backends.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.flash_attention import flash_attention as _flash
+from repro.kernels.kmeans import kmeans_assign as _kmeans
+from repro.kernels.weighted_agg import weighted_agg as _wagg
+from repro.kernels.weighted_agg import weighted_agg_tree as _wagg_tree
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def weighted_agg(stack, weights, interpret=None):
+    return _wagg(stack, weights,
+                 interpret=_default_interpret() if interpret is None else interpret)
+
+
+def weighted_agg_tree(tree, weights, interpret=None):
+    return _wagg_tree(tree, weights,
+                      interpret=_default_interpret() if interpret is None else interpret)
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    block_q=128, block_k=128, interpret=None):
+    return _flash(q, k, v, causal=causal, window=window, softcap=softcap,
+                  block_q=block_q, block_k=block_k,
+                  interpret=_default_interpret() if interpret is None else interpret)
+
+
+def kmeans_assign(x, centroids, interpret=None):
+    return _kmeans(x, centroids,
+                   interpret=_default_interpret() if interpret is None else interpret)

@@ -1,0 +1,56 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness contract).
+
+Each kernel test sweeps shapes/dtypes and asserts allclose against these.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def weighted_agg_ref(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
+    """Loss-weighted client aggregation (Eq. 5 + Eq. 12 fused).
+
+    stack (C, P), weights (C,) -> (P,) = sum_c w_c * stack_c (f32 accum)."""
+    w = weights.astype(jnp.float32)
+    return jnp.einsum("cp,c->p", stack.astype(jnp.float32), w
+                      ).astype(stack.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                        softcap: float = 0.0) -> jnp.ndarray:
+    """q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D) -> (B,Hq,Sq,D).  GQA by head fold.
+
+    Positions are absolute indices 0..S-1 (q tokens aligned to the END of
+    the kv sequence: q_pos = Sk - Sq + i)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kk = jnp.repeat(k, G, axis=1)
+    vv = jnp.repeat(v, G, axis=1)
+    scale = 1.0 / jnp.sqrt(jnp.float32(D))
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   kk.astype(jnp.float32)) * scale
+    if softcap:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = Sk - Sq + jnp.arange(Sq)
+    k_pos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vv.astype(jnp.float32)
+                      ).astype(q.dtype)
+
+
+def kmeans_assign_ref(x: jnp.ndarray, centroids: jnp.ndarray):
+    """x (N,D), centroids (K,D) -> (assignment (N,) i32, sq_dist (N,) f32)."""
+    xf = x.astype(jnp.float32)
+    cf = centroids.astype(jnp.float32)
+    d = (jnp.sum(xf * xf, -1)[:, None] - 2.0 * xf @ cf.T
+         + jnp.sum(cf * cf, -1)[None, :])
+    a = jnp.argmin(d, axis=1).astype(jnp.int32)
+    return a, jnp.min(d, axis=1)

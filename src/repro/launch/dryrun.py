@@ -1,0 +1,131 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("REPRO_XLA_EXTRA", "") +
+                           " --xla_force_host_platform_device_count=" +
+                           os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+# ^ MUST run before any jax import: jax locks the device count on first init.
+# REPRO_DRYRUN_DEVICES overrides (e.g. 8) for fast local shakeout only;
+# the deliverable runs use the default 512 (2 pods) / 256 (single pod).
+
+"""Multi-pod dry-run: lower + compile every (arch x input-shape) pair on the
+production meshes and record memory/cost/collective analysis.
+
+Usage:
+    python -m repro.launch.dryrun --arch gemma2-2b --shape train_4k --mesh single
+    python -m repro.launch.dryrun --all --mesh both --out results/dryrun
+Exit code 0 iff every attempted pair compiled.
+"""
+
+import argparse
+import json
+import sys
+import time
+import traceback
+
+
+def run_one(arch: str, shape_name: str, multi_pod: bool) -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, shape_applicable
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = shape_applicable(cfg, shape)
+    rec = {"arch": arch, "shape": shape_name,
+           "mesh": "2x16x16" if multi_pod else "16x16"}
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        bundle = build_step(arch, shape, mesh)
+        # donate the big mutable state (params for train; caches for decode)
+        donate = (0,) if shape.mode == "train" else (
+            (1,) if shape.mode == "decode" else ())
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*bundle.in_specs)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = H.memory_summary(compiled)
+    cost = H.cost_summary(compiled)
+    coll = H.collective_bytes(compiled.as_text())
+    n_dev = mesh.devices.size
+    rec.update(
+        status="ok",
+        mode=shape.mode,
+        lower_s=round(t_lower, 1),
+        compile_s=round(t_compile, 1),
+        devices=int(n_dev),
+        memory=mem,
+        per_device_hbm_gb=round(mem["total_hbm_bytes"] / 2**30, 3),
+        cost=cost,
+        collectives=coll,
+        meta={k: v for k, v in bundle.meta.items() if k != "clusters"},
+    )
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default=None, help="JSONL output path")
+    args = ap.parse_args()
+
+    from repro.configs import ARCH_NAMES
+    from repro.configs.shapes import SHAPES
+
+    archs = list(ARCH_NAMES) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES) if (args.all or not args.shape) else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    out_f = open(args.out, "a") if args.out else None
+    failures = 0
+    for arch in archs:
+        for shape in shapes:
+            for multi in meshes:
+                tag = f"{arch} x {shape} x {'2x16x16' if multi else '16x16'}"
+                try:
+                    rec = run_one(arch, shape, multi)
+                except Exception as e:  # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi else "16x16",
+                           "status": "error", "error": repr(e),
+                           "trace": traceback.format_exc()[-2000:]}
+                    failures += 1
+                status = rec["status"]
+                extra = ""
+                if status == "ok":
+                    extra = (f" hbm/dev={rec['per_device_hbm_gb']}GB"
+                             f" flops={rec['cost']['flops']:.3e}"
+                             f" coll={rec['collectives'].get('total', 0)/2**30:.2f}GB"
+                             f" compile={rec['compile_s']}s")
+                elif status == "skipped":
+                    extra = f" ({rec['reason']})"
+                else:
+                    extra = f" {rec['error']}"
+                print(f"[dryrun] {tag}: {status}{extra}", flush=True)
+                if status == "error":
+                    print(rec["trace"], flush=True)
+                if out_f:
+                    out_f.write(json.dumps(rec) + "\n")
+                    out_f.flush()
+    if out_f:
+        out_f.close()
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,93 @@
+"""Parse compiled HLO for roofline inputs.
+
+``cost_analysis`` gives FLOPs and HBM bytes; collective traffic is NOT in
+cost_analysis, so we scan the (post-SPMD-partitioning) HLO text and sum the
+result-shape bytes of every collective op, per collective kind.
+
+Convention: ``collective_bytes`` is the sum of collective *result* sizes on
+one device program — a device-local traffic proxy.  For all-reduce the
+result size equals the payload each device must move (ring moves ~2x, we
+report the payload and fold algorithm factors into the roofline constant);
+for all-gather the result is the gathered (full) size, which again is what
+crosses the links into each device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1,
+    "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# `  %name = TYPE op-name(...)` where TYPE may be a tuple
+_OP_RE = re.compile(
+    r"=\s*(\(.*?\)|[a-z0-9]+\[[0-9,]*\]\S*)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Per-kind and total collective result bytes in an HLO module text.
+
+    ``-start`` ops are counted; their matching ``-done`` is skipped to avoid
+    double counting."""
+    out: Dict[str, int] = defaultdict(int)
+    for m in _OP_RE.finditer(hlo_text):
+        line_start = hlo_text.rfind("\n", 0, m.start()) + 1
+        line = hlo_text[line_start:m.end()]
+        if "-done(" in line:
+            continue
+        kind = m.group(2)
+        out[kind] += _shape_bytes(m.group(1))
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return dict(out)
+
+
+def cost_summary(compiled) -> Dict[str, float]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    return {
+        "flops": float(ca.get("flops", 0.0)),
+        "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        "utilization_keys": sorted(
+            [k for k in ca if "bytes accessed" in k])[:4],
+    }
+
+
+def memory_summary(compiled) -> Dict[str, float]:
+    ma = compiled.memory_analysis()
+    fields = ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "generated_code_size_in_bytes",
+              "alias_size_in_bytes")
+    out = {}
+    for f in fields:
+        out[f] = float(getattr(ma, f, 0.0) or 0.0)
+    out["total_hbm_bytes"] = (out["argument_size_in_bytes"]
+                              + out["output_size_in_bytes"]
+                              + out["temp_size_in_bytes"]
+                              - out.get("alias_size_in_bytes", 0.0))
+    return out

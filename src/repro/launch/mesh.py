@@ -1,0 +1,50 @@
+"""Production mesh construction.
+
+Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
+Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+
+Defined as functions (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def make_test_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+
+
+def mesh_axes(mesh) -> tuple:
+    return tuple(mesh.axis_names)
+
+
+def client_axes_for(mesh, client_axis: str):
+    """Mesh axes over which FL clients are laid out."""
+    names = mesh.axis_names
+    if client_axis == "pod":
+        return ("pod",) if "pod" in names else None   # None => 1 client
+    # client per data index, across pods when present
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def num_clients_for(mesh, client_axis: str) -> int:
+    axes = client_axes_for(mesh, client_axis)
+    if not axes:
+        return 1
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n

@@ -1,0 +1,58 @@
+"""Serving launcher: prefill or decode steps on the production mesh.
+
+    python -m repro.launch.serve --arch qwen2-72b --shape decode_32k \
+        [--multi-pod] [--dry-run]
+
+--dry-run lowers and compiles the step with ShapeDtypeStruct inputs and
+prints memory/cost analyses (what launch/dryrun.py sweeps for every pair).
+Real execution requires the TPU pod; the CPU-scale serving path is
+examples/serve_batch.py.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args()
+
+    import jax
+    from repro.configs import get_config
+    from repro.configs.shapes import SHAPES, shape_applicable
+    from repro.launch import hlo_analysis as H
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch.steps import build_step
+
+    shape = SHAPES[args.shape]
+    assert shape.mode in ("prefill", "decode"), "use train.py for training"
+    ok, reason = shape_applicable(get_config(args.arch), shape)
+    if not ok:
+        raise SystemExit(f"{args.arch} x {args.shape} skipped: {reason}")
+
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    with mesh:
+        bundle = build_step(args.arch, shape, mesh)
+        donate = (1,) if shape.mode == "decode" else ()
+        jitted = jax.jit(bundle.fn, in_shardings=bundle.in_shardings,
+                         out_shardings=bundle.out_shardings,
+                         donate_argnums=donate)
+        t0 = time.time()
+        compiled = jitted.lower(*bundle.in_specs).compile()
+        mem = H.memory_summary(compiled)
+        print(f"compiled in {time.time()-t0:.1f}s; per-device HBM "
+              f"{mem['total_hbm_bytes']/2**30:.2f} GiB")
+        print(compiled.memory_analysis())
+        if args.dry_run:
+            return
+        raise SystemExit("full-scale serving requires the TPU pod; on CPU "
+                         "run examples/serve_batch.py")
+
+
+if __name__ == "__main__":
+    main()

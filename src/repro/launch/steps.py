@@ -1,0 +1,378 @@
+"""Step builders for the production launcher & multi-pod dry-run.
+
+For each (arch, input-shape, mesh) this module constructs:
+  * the jittable step function (FL train round / serve prefill / serve
+    decode),
+  * ShapeDtypeStruct ``input_specs`` for every input (no allocation),
+  * in/out shardings (NamedSharding trees) from `sharding/rules.py`.
+
+FL placement (DESIGN.md §4): the train step carries a leading clients dim on
+params; stage-1/stage-2 FedHC aggregation runs as explicit grouped psum
+inside shard_map (core/aggregation_spmd.py).  Serving steps use a single
+global model (TP over "model"; FSDP over "data" for the big archs).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import POD_CLIENT_ARCHS, get_config, get_profile
+from repro.configs.base import ModelConfig
+from repro.configs.shapes import InputShape, effective_cache_len
+from repro.core.aggregation_spmd import hierarchical_agg_shard
+from repro.launch.mesh import client_axes_for, num_clients_for
+from repro.models import model as M
+from repro.models import transformer as T
+from repro.sharding import rules
+
+
+class StepBundle(NamedTuple):
+    fn: Any                    # step function
+    in_specs: Tuple            # ShapeDtypeStruct pytree (positional args)
+    in_shardings: Tuple
+    out_shardings: Any
+    meta: Dict[str, Any]
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_structs(cfg: ModelConfig, dtype) -> Any:
+    return jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0),
+                                                jnp.dtype(dtype)))
+
+
+def _stack_structs(tree, n: int):
+    return jax.tree_util.tree_map(
+        lambda s: _sds((n,) + s.shape, s.dtype), tree)
+
+
+def _frontend_specs(cfg: ModelConfig, lead_shape, dtype):
+    """Extra batch inputs for audio/vlm archs (stub frontends)."""
+    out = {}
+    if cfg.frontend == "audio":
+        out["frames"] = _sds(lead_shape + (cfg.frontend_len, cfg.d_model),
+                             dtype)
+    if cfg.frontend == "vision":
+        out["patch_embeds"] = _sds(lead_shape + (cfg.frontend_len,
+                                                 cfg.d_model), dtype)
+    return out
+
+
+def default_clusters(num_clients: int, k: int) -> Tuple[Tuple[int, ...], ...]:
+    """Static contiguous clusters (the launcher replaces these with
+    k-means-derived groups via clustering.balanced_clusters)."""
+    k = min(k, num_clients)
+    while num_clients % k:
+        k -= 1
+    cap = num_clients // k
+    return tuple(tuple(range(i * cap, (i + 1) * cap)) for i in range(k))
+
+
+# ==========================================================================
+# FL train step
+# ==========================================================================
+
+def build_train_step(arch: str, shape: InputShape, mesh: Mesh, *,
+                     num_clusters: int = 4, lr: float = 0.01,
+                     rounds_per_global: int = 5,
+                     flat_agg: bool = False) -> StepBundle:
+    """flat_agg=True replaces FedHC's two-stage schedule with a single
+    every-round all-reduce over ALL clients (the C-FedAvg-on-TPU topology)
+    — the baseline the paper's hierarchy is measured against."""
+    cfg = get_config(arch)
+    prof = get_profile(arch)
+    dtype = jnp.dtype(prof.param_dtype)
+    n_clients = num_clients_for(mesh, prof.client_axis)
+    c_axes = client_axes_for(mesh, prof.client_axis)
+    clusters = default_clusters(n_clients, num_clusters)
+
+    # per-client batch
+    assert shape.global_batch % n_clients == 0, (arch, shape.name, n_clients)
+    pcb = shape.global_batch // n_clients
+    # NOTE on microbatch sizing (measured, see EXPERIMENTS.md SPerf):
+    # small microbatches that don't divide the data axis get PADDED by
+    # GSPMD (cheap); capping accum so micro == data-size made activations
+    # 16x larger per device and blew HBM 2.4x.  Keep profiles' accum.
+    accum = min(prof.grad_accum, pcb)
+    while pcb % accum:
+        accum -= 1
+    micro = pcb // accum
+
+    # ---- specs ------------------------------------------------------------
+    base_params = _param_structs(cfg, dtype)
+    params_structs = _stack_structs(base_params, n_clients)
+    seq = shape.seq_len
+    text_len = seq - cfg.frontend_len if cfg.frontend == "vision" else seq
+    batch_structs = {
+        "tokens": _sds((n_clients, pcb, text_len), jnp.int32),
+        "labels": _sds((n_clients, pcb, text_len), jnp.int32),
+    }
+    batch_structs.update(_frontend_specs(cfg, (n_clients, pcb), dtype))
+    round_struct = _sds((), jnp.int32)
+
+    # ---- shardings ----------------------------------------------------------
+    fsdp = "data" if prof.client_axis == "pod" else None
+    pspec_tree = rules.tree_param_specs(base_params, mesh, tp_axes="model",
+                                        fsdp_axes=fsdp)
+    stacked_specs = jax.tree_util.tree_map(
+        lambda s: P(c_axes, *s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+    batch_axis = None if prof.client_axis == "data" else "data"
+    batch_specs = {k: P(c_axes, batch_axis) for k in batch_structs}
+
+    params_sh = rules.tree_shardings(stacked_specs, mesh)
+    batch_sh = {k: NamedSharding(mesh, v) for k, v in batch_specs.items()}
+    round_sh = NamedSharding(mesh, P())
+
+    # ---- the step -----------------------------------------------------------
+    dispatch = prof.moe_dispatch
+    remat = prof.remat
+    acc_dt = jnp.dtype(prof.accum_dtype)
+
+    def constrain(tree):
+        """Pin the f32 grad accumulator to the params' sharding — without
+        this, GSPMD tends to replicate the accumulator across the FSDP/TP
+        axes, multiplying HBM by the axis size."""
+        return jax.tree_util.tree_map(
+            lambda x, s: jax.lax.with_sharding_constraint(
+                x, NamedSharding(mesh, s)),
+            tree, pspec_tree, is_leaf=lambda x: x is None)
+
+    def local_update(p, b):
+        """One client's local SGD step with grad accumulation."""
+        def micro_loss(p, mb):
+            return M.loss_fn(cfg, p, mb, dispatch=dispatch, remat=remat)[0]
+
+        def one_micro(carry, mb):
+            g_acc, l_acc = carry
+            l, g = jax.value_and_grad(micro_loss)(p, mb)
+            g_acc = jax.tree_util.tree_map(
+                lambda a, x: a + x.astype(acc_dt), g_acc, g)
+            return (constrain(g_acc), l_acc + l), None
+
+        mbs = jax.tree_util.tree_map(
+            lambda x: x.reshape((accum, micro) + x.shape[1:]), b)
+        g0 = constrain(jax.tree_util.tree_map(
+            lambda x: jnp.zeros(x.shape, acc_dt), p))
+        (g, loss), _ = jax.lax.scan(one_micro, (g0, 0.0), mbs)
+        scale = 1.0 / accum
+        new_p = jax.tree_util.tree_map(
+            lambda pp, gg: (pp.astype(acc_dt)
+                            - lr * scale * gg.astype(acc_dt)).astype(pp.dtype),
+            p, g)
+        return new_p, loss * scale
+
+    from jax.experimental.shard_map import shard_map
+
+    if c_axes is None or n_clients == 1:
+        # single client on this mesh (pod-client arch, single-pod mesh):
+        # the hierarchy degenerates — cluster of one, nothing to reduce.
+        def agg(stack, inv_loss, dsize, do_global):
+            return stack
+    else:
+        agg_in_specs = (stacked_specs, P(c_axes), P(c_axes), P())
+        flat_groups = (tuple(range(n_clients)),)
+
+        def agg_body(stack, inv_loss, dsize, do_global):
+            local = jax.tree_util.tree_map(lambda x: x[0], stack)
+            if flat_agg:
+                # single-stage: full-constellation all-reduce every round
+                out = hierarchical_agg_shard(local, inv_loss[0], dsize[0],
+                                             jnp.asarray(False),
+                                             axes=c_axes,
+                                             clusters=flat_groups)
+            else:
+                out = hierarchical_agg_shard(local, inv_loss[0], dsize[0],
+                                             do_global, axes=c_axes,
+                                             clusters=clusters)
+            return jax.tree_util.tree_map(lambda x: x[None], out)
+
+        agg = shard_map(agg_body, mesh=mesh, in_specs=agg_in_specs,
+                        out_specs=stacked_specs, check_rep=False)
+
+    vmap_kw = {}
+    if c_axes is not None and n_clients > 1:
+        # shard the vmapped clients dim over the client mesh axes so
+        # per-client sharding constraints inside compose correctly
+        vmap_kw["spmd_axis_name"] = c_axes if len(c_axes) > 1 else c_axes[0]
+
+    def train_step(params_stack, batch, round_idx):
+        new_stack, losses = jax.vmap(local_update, **vmap_kw)(params_stack,
+                                                              batch)
+        inv_loss = 1.0 / jnp.maximum(losses.astype(jnp.float32), 1e-8)
+        dsize = jnp.full((n_clients,), float(pcb), jnp.float32)
+        do_global = (round_idx + 1) % rounds_per_global == 0
+        new_stack = agg(new_stack, inv_loss, dsize, do_global)
+        return new_stack, jnp.mean(losses)
+
+    out_sh = (params_sh, NamedSharding(mesh, P()))
+    return StepBundle(
+        fn=train_step,
+        in_specs=(params_structs, batch_structs, round_struct),
+        in_shardings=(params_sh, batch_sh, round_sh),
+        out_shardings=out_sh,
+        meta=dict(arch=arch, shape=shape.name, mode="train",
+                  n_clients=n_clients, clusters=clusters, pcb=pcb,
+                  accum=accum, dtype=str(dtype), flat_agg=flat_agg),
+    )
+
+
+# ==========================================================================
+# Serving steps (prefill / decode)
+# ==========================================================================
+
+def _serve_param_shardings(cfg, prof, mesh, base_params):
+    fsdp = "data" if prof.client_axis == "pod" else None
+    pspec = rules.tree_param_specs(base_params, mesh, tp_axes="model",
+                                   fsdp_axes=fsdp)
+    return pspec, rules.tree_shardings(pspec, mesh)
+
+
+def cache_spec_tree(cache_structs, batch_axes, mesh):
+    """Cache sharding: the batch dim over batch_axes; attention cache seq
+    dim over "model" when divisible (caches are the decode memory hog).
+    Caches under "layers" are stacked with a leading scan-cycles dim
+    (caches under "rem_layers" are not) — detected from the PATH, never
+    from ndim."""
+    msize = mesh.shape["model"]
+
+    def walk(tree, keys):
+        if isinstance(tree, dict):
+            return {k: walk(v, keys + (str(k),)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            return tuple(walk(v, keys + (str(i),)) for i, v in enumerate(tree))
+        name = keys[-1]
+        if name == "slot_pos":
+            return P()
+        lead = 1 if keys and keys[0] == "layers" else 0
+        if name in ("k", "v", "k_scale", "v_scale"):
+            # base shapes (B, L, H, D) / (B, L, H)
+            seq_ax = "model" if tree.shape[lead + 1] % msize == 0 else None
+            return P(*((None,) * lead), batch_axes, seq_ax)
+        # ssd "h" (B,H,P,N) / rglru "h" (B,W) / "conv" (B,K-1,C)
+        return P(*((None,) * lead), batch_axes)
+
+    return walk(cache_structs, ())
+
+
+def build_prefill_step(arch: str, shape: InputShape, mesh: Mesh) -> StepBundle:
+    cfg = get_config(arch)
+    prof = get_profile(arch)
+    dtype = jnp.dtype(prof.param_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if isinstance(batch_axes, tuple):
+        bsize = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    else:
+        bsize = mesh.shape[batch_axes]
+    if B % bsize:
+        batch_axes = "data"
+
+    base_params = _param_structs(cfg, dtype)
+    pspec, params_sh = _serve_param_shardings(cfg, prof, mesh, base_params)
+
+    text_len = S - cfg.frontend_len if cfg.frontend == "vision" else S
+    batch_structs = {"tokens": _sds((B, text_len), jnp.int32)}
+    batch_structs.update(_frontend_specs(cfg, (B,), dtype))
+    batch_sh = {k: NamedSharding(mesh, P(batch_axes))
+                for k in batch_structs}
+
+    cache_structs = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, S, dtype, quantized=prof.kv_int8))
+    cache_specs = cache_spec_tree(cache_structs, batch_axes, mesh)
+    cache_sh = rules.tree_shardings(cache_specs, mesh)
+
+    dispatch = prof.moe_dispatch
+
+    quant = prof.kv_int8
+
+    def prefill_step(params, batch):
+        caches = T.init_caches(cfg, B, S, dtype, quantized=quant)
+        # last_only: unembedding all 1M prefill positions would dominate
+        # HBM and FLOPs; serving samples from the final position only
+        logits, new_caches, _ = T.forward(cfg, params, batch, mode="prefill",
+                                          caches=caches, dispatch=dispatch,
+                                          last_only=True)
+        return logits[:, 0], new_caches
+
+    logits_sh = NamedSharding(mesh, P(batch_axes, "model"))
+    return StepBundle(
+        fn=prefill_step,
+        in_specs=(base_params, batch_structs),
+        in_shardings=(params_sh, batch_sh),
+        out_shardings=(logits_sh, cache_sh),
+        meta=dict(arch=arch, shape=shape.name, mode="prefill",
+                  batch_axes=batch_axes, dtype=str(dtype)),
+    )
+
+
+def build_decode_step(arch: str, shape: InputShape, mesh: Mesh) -> StepBundle:
+    cfg = get_config(arch)
+    prof = get_profile(arch)
+    dtype = jnp.dtype(prof.param_dtype)
+    B, S = shape.global_batch, shape.seq_len
+    batch_axes = ("pod", "data") if "pod" in mesh.axis_names else "data"
+    if isinstance(batch_axes, tuple):
+        bsize = int(np.prod([mesh.shape[a] for a in batch_axes]))
+    else:
+        bsize = mesh.shape[batch_axes]
+    if B % bsize:
+        # long_500k has batch 1: replicate the batch dim
+        batch_axes = None
+
+    base_params = _param_structs(cfg, dtype)
+    pspec, params_sh = _serve_param_shardings(cfg, prof, mesh, base_params)
+
+    cache_structs = jax.eval_shape(
+        lambda: T.init_caches(cfg, B, S, dtype, quantized=prof.kv_int8))
+    cache_specs = cache_spec_tree(cache_structs, batch_axes, mesh)
+    cache_sh = rules.tree_shardings(cache_specs, mesh)
+
+    token_structs = _sds((B, 1), jnp.int32)
+    pos_struct = _sds((), jnp.int32)
+    token_sh = NamedSharding(mesh, P(batch_axes))
+    pos_sh = NamedSharding(mesh, P())
+
+    extra_structs = None
+    extra_sh = None
+    if cfg.is_enc_dec:
+        extra_structs = _sds((B, cfg.frontend_len, cfg.d_model), dtype)
+        extra_sh = NamedSharding(mesh, P(batch_axes))
+
+    dispatch = prof.moe_dispatch
+
+    def decode_step(params, caches, token, pos, enc_out=None):
+        logits, new_caches = M.decode_step(cfg, params, caches, token, pos,
+                                           enc_out=enc_out, dispatch=dispatch)
+        return logits[:, 0], new_caches
+
+    logits_sh = NamedSharding(mesh, P(batch_axes, "model"))
+    in_specs = [base_params, cache_structs, token_structs, pos_struct]
+    in_sh = [params_sh, cache_sh, token_sh, pos_sh]
+    if cfg.is_enc_dec:
+        in_specs.append(extra_structs)
+        in_sh.append(extra_sh)
+    return StepBundle(
+        fn=decode_step,
+        in_specs=tuple(in_specs),
+        in_shardings=tuple(in_sh),
+        out_shardings=(logits_sh, cache_sh),
+        meta=dict(arch=arch, shape=shape.name, mode="decode",
+                  batch_axes=batch_axes, dtype=str(dtype)),
+    )
+
+
+def build_step(arch: str, shape: InputShape, mesh: Mesh, **kw) -> StepBundle:
+    if shape.mode == "train":
+        return build_train_step(arch, shape, mesh, **kw)
+    if shape.mode == "prefill":
+        return build_prefill_step(arch, shape, mesh)
+    return build_decode_step(arch, shape, mesh)

@@ -1,0 +1,357 @@
+"""GQA attention with chunked (flash-style) computation, sliding windows,
+logit soft-capping, QKV bias, ring-buffer KV caches, and cross-attention.
+
+The chunked jnp path is the portable implementation used for lowering and CPU
+tests; ``repro.kernels.flash_attention`` is the Pallas TPU kernel with the
+same semantics (validated against ``repro.kernels.ref``).
+
+Cache layout per attention layer::
+
+    {"k": (B, L, Hkv, D), "v": (B, L, Hkv, D), "slot_pos": (L,) int32}
+
+``slot_pos[s]`` is the absolute position held in slot ``s`` (-1 = empty).
+Sliding-window layers use L = window_size as a ring buffer (slot = pos % L);
+full-attention layers use L = max sequence length.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, apply_rope, rope_frequencies, softcap
+
+NEG_INF = -1e30
+
+
+def init_attention(cfg, rng, dtype, cross: bool = False) -> dict:
+    rq, rk, rv, ro = jax.random.split(rng, 4)
+    d, qd, kvd = cfg.d_model, cfg.q_dim, cfg.kv_dim
+    s = 1.0 / math.sqrt(d)
+    p = {
+        "wq": _init(rq, (d, qd), s, dtype),
+        "wk": _init(rk, (d, kvd), s, dtype),
+        "wv": _init(rv, (d, kvd), s, dtype),
+        "wo": _init(ro, (qd, d), 1.0 / math.sqrt(qd), dtype),
+    }
+    if cfg.qkv_bias and not cross:
+        p["bq"] = jnp.zeros((qd,), dtype)
+        p["bk"] = jnp.zeros((kvd,), dtype)
+        p["bv"] = jnp.zeros((kvd,), dtype)
+    return p
+
+
+def _project_q(cfg, p, x):
+    q = x @ p["wq"]
+    if "bq" in p:
+        q = q + p["bq"]
+    B, S = x.shape[:2]
+    return q.reshape(B, S, cfg.num_heads, cfg.head_dim)
+
+
+def _project_kv(cfg, p, x):
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if "bk" in p:
+        k, v = k + p["bk"], v + p["bv"]
+    B, S = x.shape[:2]
+    k = k.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    v = v.reshape(B, S, cfg.num_kv_heads, cfg.head_dim)
+    return k, v
+
+
+# --------------------------------------------------------------------------
+# Chunked (online-softmax) attention core
+# --------------------------------------------------------------------------
+
+def chunk_attention(cfg, q, k, v, q_pos, k_pos, *, causal: bool,
+                    window: int = 0, q_chunk: int = 512,
+                    kv_chunk: int = 1024) -> jnp.ndarray:
+    """Memory-bounded attention.
+
+    q: (B, Sq, Hq, D); k/v: (B, Sk, Hkv, D); q_pos: (Sq,); k_pos: (Sk,).
+    Entries with k_pos < 0 are masked (empty cache slots).
+    Returns (B, Sq, Hq, D).
+    """
+    B, Sq, Hq, D = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    # pad to chunk multiples
+    pq = (-Sq) % q_chunk
+    pk = (-Sk) % kv_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pq), constant_values=2**30)
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pk), (0, 0), (0, 0)))
+        k_pos = jnp.pad(k_pos, (0, pk), constant_values=-1)
+    nq, nk = q.shape[1] // q_chunk, k.shape[1] // kv_chunk
+
+    qc = q.reshape(B, nq, q_chunk, Hkv, G, D).transpose(1, 0, 3, 4, 2, 5)
+    qp = q_pos.reshape(nq, q_chunk)
+    kc = k.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 3, 2, 4)
+    vc = v.reshape(B, nk, kv_chunk, Hkv, D).transpose(1, 0, 3, 2, 4)
+    kp = k_pos.reshape(nk, kv_chunk)
+
+    def q_block(carry, qi):
+        q_i, qp_i = qi                      # (B,Hkv,G,qc,D), (qc,)
+
+        def kv_block(acc, ki):
+            m, l, o = acc
+            k_j, v_j, kp_j = ki             # (B,Hkv,kc,D), ..., (kc,)
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", q_i, k_j,
+                           preferred_element_type=jnp.float32) * scale
+            if cfg.attn_softcap:
+                s = softcap(s, cfg.attn_softcap)
+            mask = (kp_j[None, :] >= 0)
+            if causal:
+                mask &= kp_j[None, :] <= qp_i[:, None]
+            if window:
+                mask &= kp_j[None, :] > qp_i[:, None] - window
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p_ij = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p_ij, axis=-1)
+            o_new = o * alpha[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p_ij.astype(v_j.dtype), v_j,
+                preferred_element_type=jnp.float32)
+            return (m_new, l_new, o_new), None
+
+        m0 = jnp.full((B, Hkv, G, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, q_chunk), jnp.float32)
+        o0 = jnp.zeros((B, Hkv, G, q_chunk, D), jnp.float32)
+        (m, l, o), _ = jax.lax.scan(kv_block, (m0, l0, o0), (kc, vc, kp))
+        out = o / jnp.maximum(l, 1e-30)[..., None]
+        return carry, out
+
+    _, out = jax.lax.scan(q_block, None, (qc, qp))
+    # out: (nq, B, Hkv, G, q_chunk, D)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, nq * q_chunk, Hq, D)
+    return out[:, :Sq].astype(q.dtype)
+
+
+def direct_attention(cfg, q, k, v, q_pos, k_pos, *, causal: bool,
+                     window: int = 0, k_scale=None, v_scale=None
+                     ) -> jnp.ndarray:
+    """Unchunked attention for tiny Sq (decode): one einsum over the whole
+    cache.  Contracting over the (possibly sharded) cache-sequence dim is a
+    plain reduction, so GSPMD lowers it to partial sums + reduce rather than
+    gathering the cache — essential at 500k-token caches.
+
+    int8-quantized caches: per-row scales fold into the dots exactly —
+    score = (q . k_int8) * k_scale[slot];  out = sum (p * v_scale) v_int8."""
+    B, Sq, Hq, D = q.shape
+    Hkv = k.shape[2]
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, Sq, Hkv, G, D)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qg.astype(jnp.float32),
+                   k.astype(jnp.float32),
+                   preferred_element_type=jnp.float32) * scale
+    if k_scale is not None:
+        s = s * k_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    if cfg.attn_softcap:
+        s = softcap(s, cfg.attn_softcap)
+    mask = k_pos[None, :] >= 0
+    if causal:
+        mask = mask & (k_pos[None, :] <= q_pos[:, None])
+    if window:
+        mask = mask & (k_pos[None, :] > q_pos[:, None] - window)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    if v_scale is not None:
+        p = p * v_scale.transpose(0, 2, 1)[:, :, None, None, :]
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", p, v.astype(jnp.float32),
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, Hq, D).astype(q.dtype)
+
+
+def windowed_full_attention(cfg, q, k, v, q_pos, k_pos, window: int,
+                            q_chunk: int = 512):
+    """Linear-cost SWA for full sequences: per q-chunk, only a static slice
+    of K/V of length (window + q_chunk) is attended.  Falls back to
+    chunk_attention when the sequence is short."""
+    B, Sq, Hq, D = q.shape
+    Sk = k.shape[1]
+    span = window + q_chunk
+    if Sk <= span or Sk != Sq:
+        return chunk_attention(cfg, q, k, v, q_pos, k_pos, causal=True,
+                               window=window, q_chunk=q_chunk)
+    pq = (-Sq) % q_chunk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, pq), (0, 0), (0, 0)))
+        q_pos = jnp.pad(q_pos, (0, pq), constant_values=2**30)
+    nq = q.shape[1] // q_chunk
+    qc = q.reshape(B, nq, q_chunk, Hq, D).transpose(1, 0, 2, 3, 4)
+    qp = q_pos.reshape(nq, q_chunk)
+    starts = jnp.clip(jnp.arange(nq) * q_chunk + q_chunk - span, 0, Sk - span)
+
+    def q_block(_, xs):
+        q_i, qp_i, st = xs
+        k_i = jax.lax.dynamic_slice_in_dim(k, st, span, axis=1)
+        v_i = jax.lax.dynamic_slice_in_dim(v, st, span, axis=1)
+        kp_i = jax.lax.dynamic_slice_in_dim(k_pos, st, span, axis=0)
+        out = chunk_attention(cfg, q_i, k_i, v_i, qp_i, kp_i, causal=True,
+                              window=window, q_chunk=q_chunk,
+                              kv_chunk=min(1024, span))
+        return _, out
+
+    _, out = jax.lax.scan(q_block, None, (qc, qp, starts))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(B, nq * q_chunk, Hq, D)
+    return out[:, :Sq]
+
+
+# --------------------------------------------------------------------------
+# Cache helpers
+# --------------------------------------------------------------------------
+
+def init_cache(cfg, kind: str, batch: int, max_len: int, dtype,
+               quantized: bool = False) -> dict:
+    """KV cache.  ``quantized=True`` stores int8 K/V with per-(B, slot, head)
+    f32 scales — halves decode HBM footprint AND read traffic vs bf16; the
+    dequant folds into the attention dots (see ``direct_attention``)."""
+    from repro.configs.shapes import effective_cache_len
+    L = effective_cache_len(cfg, kind, max_len)
+    H, D = cfg.num_kv_heads, cfg.head_dim
+    c = {"slot_pos": jnp.full((L,), -1, jnp.int32)}
+    if quantized:
+        c.update(k=jnp.zeros((batch, L, H, D), jnp.int8),
+                 v=jnp.zeros((batch, L, H, D), jnp.int8),
+                 k_scale=jnp.zeros((batch, L, H), jnp.float32),
+                 v_scale=jnp.zeros((batch, L, H), jnp.float32))
+    else:
+        c.update(k=jnp.zeros((batch, L, H, D), dtype),
+                 v=jnp.zeros((batch, L, H, D), dtype))
+    return c
+
+
+def _quantize_kv(x):
+    """x (..., D) -> (int8 values, f32 scale over D)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(amax, 1e-6) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _cache_write_decode(cache, k_new, v_new, pos):
+    """Write one token (B,1,Hkv,D) at ring slot pos % L."""
+    L = cache["k"].shape[1]
+    slot = jnp.mod(pos, L)
+    out = dict(cache)
+    if "k_scale" in cache:
+        kq, ks = _quantize_kv(k_new)
+        vq, vs = _quantize_kv(v_new)
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], kq, slot, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], vq, slot, 1)
+        out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["k_scale"], ks, slot, 1)
+        out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+            cache["v_scale"], vs, slot, 1)
+    else:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new,
+                                                       slot, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new,
+                                                       slot, 1)
+    out["slot_pos"] = jax.lax.dynamic_update_slice_in_dim(
+        cache["slot_pos"], pos[None].astype(jnp.int32), slot, axis=0)
+    return out
+
+
+def cache_from_prefill(cache, k, v):
+    """Fill a cache from full-sequence K/V (B,S,Hkv,D), ring-consistent."""
+    L = cache["k"].shape[1]
+    S = k.shape[1]
+    quant = "k_scale" in cache
+    if quant:
+        k, ks = _quantize_kv(k)
+        v, vs = _quantize_kv(v)
+    out = dict(cache)
+    if L >= S:
+        out["k"] = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, 0, 1)
+        out["v"] = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, 0, 1)
+        out["slot_pos"] = cache["slot_pos"].at[:S].set(
+            jnp.arange(S, dtype=jnp.int32))
+        if quant:
+            out["k_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["k_scale"], ks, 0, 1)
+            out["v_scale"] = jax.lax.dynamic_update_slice_in_dim(
+                cache["v_scale"], vs, 0, 1)
+        return out
+    # ring layout: position p lives at slot p % L.  The last L positions
+    # [S-L, S) therefore land at a static ROLL of the tail — use roll (two
+    # static slices) instead of a scatter, which GSPMD handles by fully
+    # replicating the operand (observed multi-GB blowups at 32k prefill).
+    shift = (S - L) % L
+    pos = jnp.arange(S - L, S, dtype=jnp.int32)
+    out["k"] = jnp.roll(k[:, S - L:], shift, axis=1)
+    out["v"] = jnp.roll(v[:, S - L:], shift, axis=1)
+    out["slot_pos"] = jnp.roll(pos, shift)
+    if quant:
+        out["k_scale"] = jnp.roll(ks[:, S - L:], shift, axis=1)
+        out["v_scale"] = jnp.roll(vs[:, S - L:], shift, axis=1)
+    return out
+
+
+# --------------------------------------------------------------------------
+# Full layer application
+# --------------------------------------------------------------------------
+
+def apply_attention(cfg, p, x, *, kind: str, mode: str,
+                    positions: jnp.ndarray, cache: Optional[dict] = None,
+                    kv_x: Optional[jnp.ndarray] = None,
+                    causal: bool = True) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """One attention layer.
+
+    mode: "train" | "prefill" | "decode".  ``positions`` is (S,) absolute
+    positions of x's tokens.  ``kv_x`` (cross-attention source) disables
+    caching/rope-on-kv and causality.
+    """
+    window = cfg.window_size if kind in ("swa", "local") else 0
+    q = _project_q(cfg, p, x)
+
+    if kv_x is not None:                      # cross-attention (enc-dec)
+        k, v = _project_kv(cfg, p, kv_x)
+        k_pos = jnp.arange(k.shape[1], dtype=jnp.int32)
+        out = chunk_attention(cfg, q, k, v, positions, k_pos, causal=False)
+        new_cache = None
+    elif mode == "decode":
+        sin, cos = rope_frequencies(cfg, positions)
+        q = apply_rope(q, sin, cos)
+        k_new, v_new = _project_kv(cfg, p, x)
+        k_new = apply_rope(k_new, sin, cos)
+        new_cache = _cache_write_decode(cache, k_new, v_new, positions[0])
+        out = direct_attention(cfg, q, new_cache["k"], new_cache["v"],
+                               positions, new_cache["slot_pos"],
+                               causal=causal, window=window,
+                               k_scale=new_cache.get("k_scale"),
+                               v_scale=new_cache.get("v_scale"))
+    else:                                     # train / prefill
+        sin, cos = rope_frequencies(cfg, positions)
+        q = apply_rope(q, sin, cos)
+        k, v = _project_kv(cfg, p, x)
+        k = apply_rope(k, sin, cos)
+        if not causal:
+            out = chunk_attention(cfg, q, k, v, positions, positions,
+                                  causal=False)
+        elif window:
+            out = windowed_full_attention(cfg, q, k, v, positions, positions,
+                                          window)
+        else:
+            out = chunk_attention(cfg, q, k, v, positions, positions,
+                                  causal=True)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = cache_from_prefill(cache, k, v)
+
+    B, S = x.shape[:2]
+    y = out.reshape(B, S, cfg.q_dim) @ p["wo"]
+    return y, new_cache

@@ -1,0 +1,126 @@
+"""Shared building blocks: norms, embeddings, RoPE, gated MLP, softcap.
+
+Everything is functional: ``init_*`` returns a param pytree (nested dicts of
+jnp arrays), ``apply`` functions are pure.  Param-dict key names are stable —
+`sharding/rules.py` pattern-matches them to produce PartitionSpecs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(rng, shape, scale, dtype):
+    return (jax.random.normal(rng, shape) * scale).astype(dtype)
+
+
+# --------------------------------------------------------------------------
+# Norms
+# --------------------------------------------------------------------------
+
+def init_norm(cfg, dtype) -> dict:
+    return {"scale": jnp.zeros((cfg.d_model,), dtype)}
+
+
+def apply_norm(cfg, p, x):
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x, -1, keepdims=True)
+        var = jnp.var(x, -1, keepdims=True)
+        y = (x - mu) * jax.lax.rsqrt(var + 1e-6)
+    else:  # rmsnorm
+        var = jnp.mean(jnp.square(x.astype(jnp.float32)), -1, keepdims=True)
+        y = (x * jax.lax.rsqrt(var + 1e-6).astype(x.dtype))
+    return y * (1.0 + p["scale"].astype(x.dtype))
+
+
+# --------------------------------------------------------------------------
+# Embedding / unembedding
+# --------------------------------------------------------------------------
+
+def init_embed(cfg, rng, dtype) -> dict:
+    """Embedding table stored at ``vocab_padded`` rows (multiple of 256) so
+    the vocab dim shards cleanly over the model axis; padded rows stay zero
+    and their logits are masked to -inf by ``unembed``."""
+    p = {"embedding": _init(rng, (cfg.vocab_padded, cfg.d_model),
+                            1.0 / math.sqrt(cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = _init(jax.random.fold_in(rng, 1),
+                             (cfg.d_model, cfg.vocab_padded),
+                             1.0 / math.sqrt(cfg.d_model), dtype)
+    return p
+
+
+def embed_tokens(cfg, p, tokens):
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.name.startswith("gemma") or cfg.name.startswith("recurrentgemma"):
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    return x
+
+
+def unembed(cfg, p, x):
+    """Logits over the PADDED vocab (shard-friendly); padded entries are
+    masked to -inf so softmax/argmax/CE ignore them."""
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("...d,vd->...v", x, p["embedding"])
+    else:
+        logits = jnp.einsum("...d,dv->...v", x, p["unembed"])
+    if cfg.final_softcap:
+        logits = softcap(logits, cfg.final_softcap)
+    if cfg.vocab_padded != cfg.vocab_size:
+        pad_mask = (jnp.arange(cfg.vocab_padded) < cfg.vocab_size)
+        logits = jnp.where(pad_mask, logits, jnp.asarray(-1e30, logits.dtype))
+    return logits
+
+
+def softcap(x, cap: float):
+    return jnp.asarray(cap, x.dtype) * jnp.tanh(x / jnp.asarray(cap, x.dtype))
+
+
+# --------------------------------------------------------------------------
+# RoPE
+# --------------------------------------------------------------------------
+
+def rope_frequencies(cfg, positions):
+    """positions (...,S) int32 -> (sin, cos) of shape (...,S, head_dim/2)."""
+    half = cfg.head_dim // 2
+    freq = cfg.rope_theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x, sin, cos):
+    """x (..., S, H, D); sin/cos (..., S, D/2) broadcast over heads."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    s = sin[..., :, None, :].astype(x.dtype)
+    c = cos[..., :, None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# --------------------------------------------------------------------------
+# Gated MLP
+# --------------------------------------------------------------------------
+
+def init_mlp(cfg, rng, dtype) -> dict:
+    r1, r2, r3 = jax.random.split(rng, 3)
+    d, f = cfg.d_model, cfg.d_ff
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "w_gate": _init(r1, (d, f), s_in, dtype),
+        "w_up": _init(r2, (d, f), s_in, dtype),
+        "w_down": _init(r3, (f, d), s_out, dtype),
+    }
+
+
+def activation(cfg, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(cfg, p, x):
+    h = activation(cfg, x @ p["w_gate"]) * (x @ p["w_up"])
+    return h @ p["w_down"]

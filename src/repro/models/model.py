@@ -1,0 +1,93 @@
+"""Public model API: init / loss / prefill / decode for any ModelConfig.
+
+This is the layer the FL core and the launchers consume; it hides the
+per-family details behind four functions.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import transformer as T
+
+
+def init_params(cfg: ModelConfig, rng, dtype=None) -> dict:
+    return T.init_params(cfg, rng, dtype)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype) -> dict:
+    return T.init_caches(cfg, batch, max_len, dtype)
+
+
+def cross_entropy(logits, labels, mask=None) -> jnp.ndarray:
+    """Mean next-token cross-entropy.  logits (B,S,V), labels (B,S)."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def loss_fn(cfg: ModelConfig, params: dict, batch: Dict, *,
+            dispatch: str = "dense", remat: bool = False,
+            aux_weight: float = 0.01) -> Tuple[jnp.ndarray, dict]:
+    """Training loss: next-token CE (+ MoE aux).  batch needs "tokens",
+    "labels" (and frontend inputs for audio/vlm)."""
+    logits, _, aux = T.forward(cfg, params, batch, mode="train",
+                               dispatch=dispatch, remat=remat)
+    labels = batch["labels"]
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        # loss only over the text positions (suffix of the sequence)
+        n_patch = batch["patch_embeds"].shape[1]
+        logits = logits[:, n_patch:]
+    ce = cross_entropy(logits[:, :-1], labels[:, 1:])
+    metrics = {"ce": ce, "aux": aux}
+    return ce + aux_weight * aux, metrics
+
+
+def prefill(cfg: ModelConfig, params: dict, batch: Dict, max_len: int,
+            dispatch: str = "dense", quantized_cache: bool = False
+            ) -> Tuple[jnp.ndarray, dict]:
+    """Full-sequence forward that also fills KV/state caches."""
+    B = batch["tokens"].shape[0]
+    dtype = jax.tree_util.tree_leaves(params)[0].dtype
+    caches = T.init_caches(cfg, B, max_len, dtype, quantized=quantized_cache)
+    logits, new_caches, _ = T.forward(cfg, params, batch, mode="prefill",
+                                      caches=caches, dispatch=dispatch)
+    return logits, new_caches
+
+
+def prefill_last(cfg: ModelConfig, params: dict, batch: Dict, max_len: int,
+                 dispatch: str = "dense", quantized_cache: bool = False):
+    """Serving prefill: caches + last-position logits only."""
+    B = batch["tokens"].shape[0]
+    dtype = jax.tree_util.tree_leaves(params)[0].dtype
+    caches = T.init_caches(cfg, B, max_len, dtype, quantized=quantized_cache)
+    logits, new_caches, _ = T.forward(cfg, params, batch, mode="prefill",
+                                      caches=caches, dispatch=dispatch,
+                                      last_only=True)
+    return logits[:, 0], new_caches
+
+
+def decode_step(cfg: ModelConfig, params: dict, caches: dict,
+                token: jnp.ndarray, pos: jnp.ndarray,
+                enc_out: Optional[jnp.ndarray] = None,
+                dispatch: str = "dense") -> Tuple[jnp.ndarray, dict]:
+    """One-token decode.  token (B,1) int32, pos scalar int32 (absolute
+    position of `token`).  Returns (logits (B,1,V), new caches)."""
+    batch = {"tokens": token, "pos": pos}
+    if enc_out is not None:
+        batch["enc_out"] = enc_out
+    logits, new_caches, _ = T.forward(cfg, params, batch, mode="decode",
+                                      caches=caches, dispatch=dispatch)
+    return logits, new_caches
+
+
+def param_count(params) -> int:
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))

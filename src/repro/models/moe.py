@@ -1,0 +1,165 @@
+"""Mixture-of-experts layer (grok-1, mixtral): top-k router + gated-MLP
+experts.
+
+Two dispatch strategies:
+
+* ``dense``   — every expert processes every token, combined with the
+                (sparse) router weights.  Simple, numerically exact, used as
+                the oracle in tests and for smoke-scale models.  Costs
+                E/top_k more FLOPs than necessary.
+* ``capacity``— MaxText-style capacity-based gather/scatter dispatch: tokens
+                are sorted by expert assignment, each expert processes a
+                fixed-capacity slice.  Production path for the large MoE
+                archs; tokens over capacity are dropped (standard Switch/
+                Mixtral-style training behaviour).
+
+``repro.tests.test_moe`` checks capacity == dense when capacity is ample.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init, activation
+
+
+def init_moe(cfg, rng, dtype) -> dict:
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    s_in, s_out = 1.0 / math.sqrt(d), 1.0 / math.sqrt(f)
+    return {
+        "router": _init(r0, (d, e), s_in, dtype),
+        "w_gate": _init(r1, (e, d, f), s_in, dtype),
+        "w_up": _init(r2, (e, d, f), s_in, dtype),
+        "w_down": _init(r3, (e, f, d), s_out, dtype),
+    }
+
+
+def router_probs(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (top-k weights (..,k), top-k indices (..,k), full probs)."""
+    logits = (x @ p["router"]).astype(jnp.float32)
+    k = cfg.experts_per_token
+    top_logits, top_idx = jax.lax.top_k(logits, k)
+    top_w = jax.nn.softmax(top_logits, axis=-1)
+    return top_w, top_idx, jax.nn.softmax(logits, axis=-1)
+
+
+def load_balance_loss(cfg, probs, top_idx) -> jnp.ndarray:
+    """Switch-style auxiliary load-balance loss (mean prob * mean dispatch)."""
+    e = cfg.num_experts
+    dispatch = jax.nn.one_hot(top_idx, e, dtype=jnp.float32).sum(-2)
+    frac_tokens = dispatch.reshape(-1, e).mean(0)
+    frac_probs = probs.reshape(-1, e).mean(0)
+    return e * jnp.sum(frac_tokens * frac_probs)
+
+
+def _expert_mlp(cfg, p, x, eidx=None):
+    """x: (E, C, d) batched per-expert gated MLP."""
+    h = activation(cfg, jnp.einsum("ecd,edf->ecf", x, p["w_gate"])) \
+        * jnp.einsum("ecd,edf->ecf", x, p["w_up"])
+    return jnp.einsum("ecf,efd->ecd", h, p["w_down"])
+
+
+def apply_moe_dense(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dense dispatch: all experts on all tokens (oracle path)."""
+    B, S, d = x.shape
+    top_w, top_idx, probs = router_probs(cfg, p, x)
+    xt = x.reshape(1, B * S, d)
+    xt = jnp.broadcast_to(xt, (cfg.num_experts, B * S, d))
+    ye = _expert_mlp(cfg, p, xt)                       # (E, BS, d)
+    combine = jnp.zeros((B * S, cfg.num_experts), jnp.float32)
+    flat_idx = top_idx.reshape(B * S, -1)
+    flat_w = top_w.reshape(B * S, -1)
+    combine = combine.at[jnp.arange(B * S)[:, None], flat_idx].add(flat_w)
+    y = jnp.einsum("te,etd->td", combine.astype(x.dtype), ye)
+    aux = load_balance_loss(cfg, probs, top_idx)
+    return y.reshape(B, S, d), aux
+
+
+def apply_moe_capacity(cfg, p, x, capacity_factor: float = 1.25
+                       ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Capacity-based sorted dispatch (production path).
+
+    tokens -> sort by assigned expert -> fixed (E, C) slices -> expert MLP ->
+    scatter-add back with router combine weights.  Over-capacity tokens are
+    dropped (contribute zero for that expert)."""
+    B, S, d = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    cap = int(math.ceil(T * K / E * capacity_factor))
+    cap = min(cap, T)
+
+    top_w, top_idx, probs = router_probs(cfg, p, x)
+    aux = load_balance_loss(cfg, probs, top_idx)
+    xt = x.reshape(T, d)
+    flat_e = top_idx.reshape(T * K)                    # expert of each slot
+    flat_w = top_w.reshape(T * K)
+    flat_t = jnp.repeat(jnp.arange(T), K)              # token of each slot
+
+    order = jnp.argsort(flat_e, stable=True)           # group slots by expert
+    e_sorted = flat_e[order]
+    t_sorted = flat_t[order]
+    w_sorted = flat_w[order]
+    # rank of each slot within its expert group
+    rank = jnp.arange(T * K) - jnp.searchsorted(e_sorted, e_sorted, side="left")
+    keep = rank < cap
+    slot_in_buf = e_sorted * cap + rank                # position in (E*C)
+    slot_in_buf = jnp.where(keep, slot_in_buf, E * cap)  # overflow bucket
+
+    buf = jnp.zeros((E * cap + 1, d), x.dtype).at[slot_in_buf].set(xt[t_sorted])
+    ye = _expert_mlp(cfg, p, buf[:-1].reshape(E, cap, d)).reshape(E * cap, d)
+    ye = jnp.concatenate([ye, jnp.zeros((1, d), ye.dtype)], 0)
+
+    contrib = ye[slot_in_buf] * w_sorted[:, None].astype(x.dtype)
+    y = jnp.zeros((T, d), x.dtype).at[t_sorted].add(
+        jnp.where(keep[:, None], contrib, 0))
+    return y.reshape(B, S, d), aux
+
+
+def apply_moe_scan(cfg, p, x) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Scan-over-experts dense dispatch: every expert processes every token
+    (same numerics as ``dense``) but experts run SEQUENTIALLY, so the live
+    intermediate is one expert's activation instead of E of them.
+
+    This is the shard-friendly production path for the dry-run: it contains
+    no sort/scatter (which GSPMD reshards catastrophically at 1M tokens) —
+    the cost is E/top_k extra FLOPs, visible in the roofline table's
+    MODEL_FLOPS/HLO_FLOPs ratio and attacked in EXPERIMENTS.md §Perf."""
+    B, S, d = x.shape
+    top_w, top_idx, probs = router_probs(cfg, p, x)
+    aux = load_balance_loss(cfg, probs, top_idx)
+    # combine[b, s, e]: routing weight (0 if unrouted).  Built with one_hot
+    # (no scatter) and kept at (B, S, E) — flattening (B,S)->T breaks the
+    # batch sharding under GSPMD and replicates 1M-token activations.
+    combine = jnp.sum(
+        jax.nn.one_hot(top_idx, cfg.num_experts, dtype=jnp.float32)
+        * top_w[..., None], axis=-2)                       # (B,S,E)
+
+    @jax.checkpoint
+    def expert_out(x, wg, wu, wd, ce):
+        # checkpointed: without this the scan's linearization keeps every
+        # expert's f32 hidden state alive simultaneously (E x ~1 GB/device
+        # measured on grok-1 at train_4k — see EXPERIMENTS.md SPerf)
+        h = activation(cfg, x @ wg) * (x @ wu)
+        return (h @ wd) * ce[..., None].astype(x.dtype)
+
+    def one_expert(acc, ew):
+        wg, wu, wd, ce = ew                                # ce: (B,S)
+        return acc + expert_out(x, wg, wu, wd, ce), None
+
+    acc0 = jnp.zeros((B, S, d), x.dtype)
+    acc, _ = jax.lax.scan(one_expert, acc0,
+                          (p["w_gate"], p["w_up"], p["w_down"],
+                           combine.transpose(2, 0, 1)))
+    return acc, aux
+
+
+def apply_moe(cfg, p, x, dispatch: str = "dense"):
+    if dispatch == "capacity":
+        return apply_moe_capacity(cfg, p, x)
+    if dispatch == "scan":
+        return apply_moe_scan(cfg, p, x)
+    return apply_moe_dense(cfg, p, x)

@@ -1,0 +1,121 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin) [arXiv:2402.19427].
+
+Block structure (the "recurrent block" of Griffin):
+
+    x -> linear_x (d -> w) -> causal conv (width 4) -> RG-LRU -> *
+    x -> linear_gate (d -> w) -> gelu ----------------------------+-> linear_out
+
+RG-LRU recurrence (per channel):
+    r_t = sigmoid(W_a y_t + b_a)          recurrence gate
+    i_t = sigmoid(W_x y_t + b_x)          input gate
+    log a_t = -c * softplus(Lambda) * r_t
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * y_t)
+
+Training uses jax.lax.associative_scan over the sequence; decode is the
+single-step recurrence.  Cache: {"h": (B, W) f32, "conv": (B, K-1, W)}.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+_C = 8.0  # Griffin's fixed temperature
+
+
+def init_rglru(cfg, rng, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    r0, r1, r2, r3, r4 = jax.random.split(rng, 5)
+    d = cfg.d_model
+    s = 1.0 / math.sqrt(d)
+    return {
+        "w_x": _init(r0, (d, w), s, dtype),
+        "w_gate": _init(r1, (d, w), s, dtype),
+        "conv_w": _init(r2, (4, w), 0.5, dtype),
+        "conv_b": jnp.zeros((w,), dtype),
+        "lru_wa": _init(r3, (w, w), 1.0 / math.sqrt(w), dtype),
+        "lru_wx": _init(r4, (w, w), 1.0 / math.sqrt(w), dtype),
+        "lru_ba": jnp.zeros((w,), jnp.float32),
+        "lru_bx": jnp.zeros((w,), jnp.float32),
+        # Lambda init so a^c in ~(0.9, 0.999)
+        "lru_lambda": jnp.linspace(0.3, 1.5, w).astype(jnp.float32),
+        "w_out": _init(jax.random.fold_in(rng, 9), (w, d), 1.0 / math.sqrt(w), dtype),
+    }
+
+
+def _conv(p, y, conv_state=None):
+    K = p["conv_w"].shape[0]
+    if conv_state is None:
+        pad = jnp.zeros(y.shape[:1] + (K - 1,) + y.shape[2:], y.dtype)
+    else:
+        pad = conv_state.astype(y.dtype)
+    yp = jnp.concatenate([pad, y], axis=1)
+    out = sum(yp[:, i:i + y.shape[1]] * p["conv_w"][i] for i in range(K))
+    return out + p["conv_b"], yp[:, -(K - 1):]
+
+
+def _lru_coeffs(p, y):
+    """Per-step (a_t, b_t) with h_t = a_t h_{t-1} + b_t."""
+    yf = y.astype(jnp.float32)
+    r = jax.nn.sigmoid(yf @ p["lru_wa"].astype(jnp.float32) + p["lru_ba"])
+    i = jax.nn.sigmoid(yf @ p["lru_wx"].astype(jnp.float32) + p["lru_bx"])
+    log_a = -_C * jax.nn.softplus(p["lru_lambda"]) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (i * yf)
+    return a, gated
+
+
+def apply_rglru(cfg, p, x, *, mode: str, cache: Optional[dict] = None
+                ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """x: (B,S,d) -> (B,S,d)."""
+    y = x @ p["w_x"]
+    gate = jax.nn.gelu(x @ p["w_gate"], approximate=True)
+
+    if mode == "decode":
+        y, new_conv = _conv(p, y, cache["conv"])
+        a, b = _lru_coeffs(p, y)                        # (B,1,W)
+        h = cache["h"][:, None] * a + b
+        out = h[:, 0][:, None]                          # (B,1,W)
+        new_cache = {"h": h[:, 0], "conv": new_conv.astype(cache["conv"].dtype)}
+    else:
+        y, conv_tail = _conv(p, y, None)
+        a, b = _lru_coeffs(p, y)                        # (B,S,W)
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, b1 * a2 + b2
+
+        a_sc, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+        out = h
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {"h": h[:, -1],
+                         "conv": conv_tail.astype(cache["conv"].dtype)}
+
+    out = out.astype(x.dtype) * gate
+    return out @ p["w_out"], new_cache
+
+
+def init_rglru_cache(cfg, batch: int, dtype) -> dict:
+    w = cfg.lru_width or cfg.d_model
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, 3, w), dtype)}
+
+
+def rglru_reference(p, y):
+    """Sequential oracle for the scan (tests)."""
+    a, b = _lru_coeffs(p, y)
+
+    def step(h, inp):
+        a_t, b_t = inp
+        h = a_t * h + b_t
+        return h, h
+
+    h0 = jnp.zeros(a.shape[0:1] + a.shape[2:], jnp.float32)
+    _, hs = jax.lax.scan(step, h0, (a.transpose(1, 0, 2), b.transpose(1, 0, 2)))
+    return hs.transpose(1, 0, 2)

@@ -1,0 +1,197 @@
+"""Mamba-2 SSD (state-space duality) block [arXiv:2405.21060].
+
+Train/prefill path: chunked SSD algorithm (intra-chunk quadratic term +
+inter-chunk linear recurrence over chunk states, via lax.scan).
+Decode path: exact single-step recurrence on the (B, H, P, N) state.
+
+Cache layout per SSD layer::
+
+    {"h": (B, H, P, N) f32, "conv": (B, K-1, d_inner + 2N)}
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import _init
+
+
+def init_ssd(cfg, rng, dtype) -> dict:
+    r0, r1, r2, r3 = jax.random.split(rng, 4)
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * ns
+    s = 1.0 / math.sqrt(d)
+    return {
+        "in_proj": _init(r0, (d, 2 * di + 2 * ns + nh), s, dtype),
+        "conv_w": _init(r1, (cfg.ssm_conv, conv_ch), 1.0 / math.sqrt(cfg.ssm_conv), dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh)).astype(jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.zeros((di,), dtype),
+        "out_proj": _init(r2, (di, d), 1.0 / math.sqrt(di), dtype),
+    }
+
+
+def _gated_rmsnorm(y, z, scale):
+    y = y * jax.nn.silu(z)
+    var = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    return (y * jax.lax.rsqrt(var + 1e-6).astype(y.dtype)
+            ) * (1.0 + scale.astype(y.dtype))
+
+
+def _split_proj(cfg, zxbcdt):
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    z = zxbcdt[..., :di]
+    xBC = zxbcdt[..., di:2 * di + 2 * ns]
+    dt = zxbcdt[..., 2 * di + 2 * ns:]
+    return z, xBC, dt
+
+
+def _causal_conv(cfg, p, xBC, conv_state=None):
+    """Depthwise causal conv, width K.  conv_state: (B, K-1, C) history."""
+    K = cfg.ssm_conv
+    if conv_state is None:
+        pad = jnp.zeros(xBC.shape[:1] + (K - 1,) + xBC.shape[2:], xBC.dtype)
+    else:
+        pad = conv_state.astype(xBC.dtype)
+    xp = jnp.concatenate([pad, xBC], axis=1)           # (B, S+K-1, C)
+    out = sum(xp[:, i:i + xBC.shape[1]] * p["conv_w"][i] for i in range(K))
+    out = jax.nn.silu(out + p["conv_b"])
+    new_state = xp[:, -(K - 1):] if K > 1 else pad[:, :0]
+    return out, new_state
+
+
+def _ssd_chunked(cfg, x, dt, B_mat, C_mat, A, h0=None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P); dt: (B,S,H) (post-softplus); B_mat/C_mat: (B,S,N);
+    A: (H,) negative.  Returns (y (B,S,H,P), h_final (B,H,P,N))."""
+    Bb, S, H, P = x.shape
+    N = B_mat.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    pad = (-S) % Q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B_mat = jnp.pad(B_mat, ((0, 0), (0, pad), (0, 0)))
+        C_mat = jnp.pad(C_mat, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // Q
+
+    xc = x.reshape(Bb, nc, Q, H, P).astype(jnp.float32)
+    dtc = dt.reshape(Bb, nc, Q, H).astype(jnp.float32)
+    Bc = B_mat.reshape(Bb, nc, Q, N).astype(jnp.float32)
+    Cc = C_mat.reshape(Bb, nc, Q, N).astype(jnp.float32)
+
+    dA = dtc * A                                        # (B,nc,Q,H) negative
+    cum = jnp.cumsum(dA, axis=2)                        # within-chunk cumsum
+
+    # intra-chunk (quadratic in Q): L[i,j] = exp(cum_i - cum_j), i >= j
+    li = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # (B,nc,Q,Q,H)
+    mask = jnp.tril(jnp.ones((Q, Q), bool))[None, None, :, :, None]
+    # mask BEFORE exp: exp of the (positive) upper-triangular entries would
+    # overflow and poison gradients through the where.
+    L = jnp.exp(jnp.where(mask, li, -1e30))
+    G = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)           # (B,nc,Q,Q)
+    M = G[..., None] * L                                # (B,nc,Q,Q,H)
+    y_intra = jnp.einsum("bcijh,bcjh,bcjhp->bcihp", M, dtc, xc)
+
+    # chunk states: S_k = sum_j exp(cum_last - cum_j) dt_j B_j x_j
+    decay_out = jnp.exp(cum[:, :, -1:, :] - cum)        # (B,nc,Q,H)
+    states = jnp.einsum("bcjh,bcjh,bcjn,bcjhp->bchnp",
+                        decay_out, dtc, Bc, xc)         # (B,nc,H,N,P)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])             # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp                                   # (B,H,N,P), (B,H)
+        h_new = h * dec[..., None, None] + st
+        return h_new, h                                 # emit PRE-chunk state
+
+    h_init = (jnp.zeros((Bb, H, N, P), jnp.float32) if h0 is None
+              else h0.transpose(0, 1, 3, 2))            # (B,H,P,N)->(B,H,N,P)
+    h_last, h_prev = jax.lax.scan(
+        step, h_init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    h_prev = h_prev.transpose(1, 0, 2, 3, 4)            # (B,nc,H,N,P)
+
+    # inter-chunk: y_i += C_i . (exp(cum_i) * h_prev)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         Cc, jnp.exp(cum), h_prev)
+    y = (y_intra + y_inter).reshape(Bb, nc * Q, H, P)[:, :S]
+    return y, h_last.transpose(0, 1, 3, 2)              # (B,H,P,N)
+
+
+def apply_ssd(cfg, p, x, *, mode: str, cache: Optional[dict] = None
+              ) -> Tuple[jnp.ndarray, Optional[dict]]:
+    """One Mamba-2 block.  x: (B,S,d)."""
+    Bb, S, d = x.shape
+    di, ns, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    zxbcdt = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    A = -jnp.exp(p["A_log"])                            # (H,) negative
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+
+    if mode == "decode":
+        conv_state = cache["conv"]
+        xBC, new_conv = _causal_conv(cfg, p, xBC, conv_state)
+        xs = xBC[..., :di].reshape(Bb, S, nh, P)
+        B_mat = xBC[..., di:di + ns]
+        C_mat = xBC[..., di + ns:]
+        # exact recurrence, S == 1
+        h = cache["h"]                                  # (B,H,P,N)
+        dA = jnp.exp(dt[:, 0] * A)                      # (B,H)
+        dBx = jnp.einsum("bh,bn,bhp->bhpn", dt[:, 0],
+                         B_mat[:, 0].astype(jnp.float32),
+                         xs[:, 0].astype(jnp.float32))
+        h_new = h * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", h_new,
+                       C_mat[:, 0].astype(jnp.float32))
+        y = y + p["D"][:, None] * xs[:, 0].astype(jnp.float32)
+        y = y.reshape(Bb, 1, di).astype(x.dtype)
+        new_cache = {"h": h_new, "conv": new_conv}
+    else:
+        xBC, conv_tail = _causal_conv(cfg, p, xBC, None)
+        xs = xBC[..., :di].reshape(Bb, S, nh, P)
+        B_mat = xBC[..., di:di + ns]
+        C_mat = xBC[..., di + ns:]
+        y, h_last = _ssd_chunked(cfg, xs, dt, B_mat, C_mat, A)
+        y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+        y = y.reshape(Bb, S, di).astype(x.dtype)
+        new_cache = None
+        if mode == "prefill" and cache is not None:
+            new_cache = {"h": h_last, "conv": conv_tail.astype(cache["conv"].dtype)}
+
+    y = _gated_rmsnorm(y, z, p["norm_scale"])
+    return y @ p["out_proj"], new_cache
+
+
+def init_ssd_cache(cfg, batch: int, dtype) -> dict:
+    di, ns, nh, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    return {
+        "h": jnp.zeros((batch, nh, P, ns), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * ns), dtype),
+    }
+
+
+def ssd_reference(cfg, x, dt, B_mat, C_mat, A, D):
+    """O(S^2)-free sequential oracle for tests: plain recurrence."""
+    Bb, S, H, P = x.shape
+
+    def step(h, inp):
+        x_t, dt_t, B_t, C_t = inp
+        dA = jnp.exp(dt_t * A)                          # (B,H)
+        h = h * dA[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dt_t, B_t, x_t)
+        y = jnp.einsum("bhpn,bn->bhp", h, C_t) + D[:, None] * x_t
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, P, B_mat.shape[-1]), jnp.float32)
+    xs = (x.transpose(1, 0, 2, 3).astype(jnp.float32),
+          dt.transpose(1, 0, 2).astype(jnp.float32),
+          B_mat.transpose(1, 0, 2).astype(jnp.float32),
+          C_mat.transpose(1, 0, 2).astype(jnp.float32))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3), h

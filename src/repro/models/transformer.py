@@ -1,0 +1,269 @@
+"""Transformer stack: heterogeneous layer patterns via scan-over-cycles.
+
+A model's depth is ``layer_pattern`` cycled; parameters for each pattern
+position are stacked over cycles and the stack is a single ``lax.scan``
+(remat-wrapped for training), keeping HLO size O(pattern) instead of
+O(num_layers).  Layers left over when ``num_layers % len(pattern) != 0``
+are unrolled at the end ("remainder" layers).
+
+Supports: dense / GQA / SWA / local-global attention, MoE, Mamba-2 SSD,
+RG-LRU hybrid blocks, and encoder-decoder (whisper) with cross-attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ATTN_KINDS, ModelConfig
+from repro.models import attention as attn
+from repro.models import layers as L
+from repro.models import moe as moe_lib
+from repro.models import rglru as rglru_lib
+from repro.models import ssm as ssm_lib
+
+
+# --------------------------------------------------------------------------
+# Block init/apply
+# --------------------------------------------------------------------------
+
+def init_block(cfg, kind: str, rng, dtype, cross: bool = False) -> dict:
+    rs = jax.random.split(rng, 4)
+    p: Dict[str, Any] = {"norm1": L.init_norm(cfg, dtype)}
+    if kind in ATTN_KINDS:
+        p["attn"] = attn.init_attention(cfg, rs[0], dtype)
+    elif kind == "rglru":
+        p["rglru"] = rglru_lib.init_rglru(cfg, rs[0], dtype)
+    elif kind == "ssd":
+        p["ssd"] = ssm_lib.init_ssd(cfg, rs[0], dtype)
+    else:
+        raise ValueError(kind)
+    if cross:
+        p["norm_cross"] = L.init_norm(cfg, dtype)
+        p["cross"] = attn.init_attention(cfg, rs[1], dtype, cross=True)
+    if kind != "ssd":                                   # mamba2 has no MLP
+        p["norm2"] = L.init_norm(cfg, dtype)
+        if cfg.num_experts:
+            p["moe"] = moe_lib.init_moe(cfg, rs[2], dtype)
+        else:
+            p["mlp"] = L.init_mlp(cfg, rs[2], dtype)
+    if cfg.post_norm:
+        p["postnorm1"] = L.init_norm(cfg, dtype)
+        if kind != "ssd":
+            p["postnorm2"] = L.init_norm(cfg, dtype)
+    return p
+
+
+def apply_block(cfg, kind: str, p: dict, x, *, mode: str, positions,
+                cache=None, enc_out=None, causal: bool = True,
+                dispatch: str = "dense"):
+    """Returns (x, new_cache, aux_loss)."""
+    aux = jnp.zeros((), jnp.float32)
+    h = L.apply_norm(cfg, p["norm1"], x)
+    if kind in ATTN_KINDS:
+        h, new_cache = attn.apply_attention(
+            cfg, p["attn"], h, kind=kind, mode=mode, positions=positions,
+            cache=cache, causal=causal)
+    elif kind == "rglru":
+        h, new_cache = rglru_lib.apply_rglru(cfg, p["rglru"], h, mode=mode,
+                                             cache=cache)
+    elif kind == "ssd":
+        h, new_cache = ssm_lib.apply_ssd(cfg, p["ssd"], h, mode=mode,
+                                         cache=cache)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norm:
+        h = L.apply_norm(cfg, p["postnorm1"], h)
+    x = x + h
+
+    if "cross" in p:                                    # enc-dec decoder
+        h = L.apply_norm(cfg, p["norm_cross"], x)
+        h, _ = attn.apply_attention(cfg, p["cross"], h, kind="attn",
+                                    mode=mode, positions=positions,
+                                    kv_x=enc_out)
+        x = x + h
+
+    if kind != "ssd":
+        h = L.apply_norm(cfg, p["norm2"], x)
+        if cfg.num_experts:
+            h, aux = moe_lib.apply_moe(cfg, p["moe"], h, dispatch)
+        else:
+            h = L.apply_mlp(cfg, p["mlp"], h)
+        if cfg.post_norm:
+            h = L.apply_norm(cfg, p["postnorm2"], h)
+        x = x + h
+    return x, new_cache, aux
+
+
+# --------------------------------------------------------------------------
+# Parameter initialization
+# --------------------------------------------------------------------------
+
+def _stack(trees):
+    return jax.tree_util.tree_map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def init_params(cfg: ModelConfig, rng, dtype=None) -> dict:
+    dtype = dtype or jnp.dtype(cfg.dtype)
+    pat = cfg.layer_pattern
+    n_cycles = cfg.num_layers // len(pat)
+    rem = cfg.num_layers % len(pat)
+    r_embed, r_layers, r_enc = jax.random.split(rng, 3)
+
+    params: Dict[str, Any] = {"embed": L.init_embed(cfg, r_embed, dtype)}
+    cross = cfg.is_enc_dec
+    # stacked per pattern position
+    stacked = []
+    for j, kind in enumerate(pat):
+        blocks = [init_block(cfg, kind, jax.random.fold_in(r_layers, c * len(pat) + j),
+                             dtype, cross=cross) for c in range(n_cycles)]
+        stacked.append(_stack(blocks))
+    params["layers"] = tuple(stacked)
+    params["rem_layers"] = tuple(
+        init_block(cfg, pat[j], jax.random.fold_in(r_layers, 10_000 + j),
+                   dtype, cross=cross) for j in range(rem))
+    params["final_norm"] = L.init_norm(cfg, dtype)
+
+    if cfg.is_enc_dec:
+        enc_blocks = [init_block(cfg, "attn",
+                                 jax.random.fold_in(r_enc, c), dtype)
+                      for c in range(cfg.encoder_layers)]
+        params["encoder"] = {"layers": (_stack(enc_blocks),),
+                             "final_norm": L.init_norm(cfg, dtype)}
+        params["enc_pos"] = L._init(jax.random.fold_in(r_enc, 999),
+                                    (cfg.frontend_len, cfg.d_model),
+                                    0.02, dtype)
+    if cfg.frontend == "vision":
+        # projector stub: pre-extracted patch features -> d_model
+        params["proj"] = L._init(jax.random.fold_in(r_embed, 7),
+                                 (cfg.d_model, cfg.d_model),
+                                 cfg.d_model ** -0.5, dtype)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Cache initialization
+# --------------------------------------------------------------------------
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, dtype,
+                quantized: bool = False) -> dict:
+    """Cache pytree matching the layer structure."""
+    pat = cfg.layer_pattern
+    n_cycles = cfg.num_layers // len(pat)
+    rem = cfg.num_layers % len(pat)
+
+    def one(kind):
+        if kind in ATTN_KINDS:
+            return attn.init_cache(cfg, kind, batch, max_len, dtype,
+                                   quantized=quantized)
+        if kind == "ssd":
+            return ssm_lib.init_ssd_cache(cfg, batch, dtype)
+        return rglru_lib.init_rglru_cache(cfg, batch, dtype)
+
+    stacked = tuple(
+        jax.tree_util.tree_map(lambda x: jnp.broadcast_to(x, (n_cycles,) + x.shape),
+                               one(kind))
+        for kind in pat)
+    remainder = tuple(one(pat[j]) for j in range(rem))
+    return {"layers": stacked, "rem_layers": remainder}
+
+
+# --------------------------------------------------------------------------
+# Forward pass
+# --------------------------------------------------------------------------
+
+def _embed_inputs(cfg, params, batch, mode, remat=False):
+    """Returns (x, positions, enc_out)."""
+    tokens = batch["tokens"]
+    x = L.embed_tokens(cfg, params["embed"], tokens)
+    enc_out = None
+    if mode == "decode":
+        positions = jnp.broadcast_to(batch["pos"].astype(jnp.int32), (1,))
+    else:
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+    if cfg.frontend == "vision" and "patch_embeds" in batch:
+        pe = batch["patch_embeds"].astype(x.dtype) @ params["proj"]
+        x = jnp.concatenate([pe, x], axis=1)
+        if mode != "decode":
+            positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+    if cfg.is_enc_dec:
+        if "enc_out" in batch:
+            enc_out = batch["enc_out"]
+        else:
+            enc_out = encode(cfg, params, batch["frames"], remat=remat)
+    return x, positions, enc_out
+
+
+def encode(cfg, params, frames, remat: bool = False):
+    """Whisper-style encoder over precomputed frame embeddings (stub
+    frontend): frames (B, frontend_len, d_model)."""
+    enc = params["encoder"]
+    x = frames.astype(params["enc_pos"].dtype) + params["enc_pos"]
+    positions = jnp.arange(x.shape[1], dtype=jnp.int32)
+
+    def body(carry, lp):
+        y, _, _ = apply_block(cfg, "attn", lp, carry, mode="train",
+                              positions=positions, causal=False)
+        return y, None
+
+    if remat:
+        body = jax.checkpoint(body)
+    x, _ = jax.lax.scan(body, x, enc["layers"][0])
+    return L.apply_norm(cfg, enc["final_norm"], x)
+
+
+def forward(cfg: ModelConfig, params: dict, batch: dict, *, mode: str,
+            caches: Optional[dict] = None, dispatch: str = "dense",
+            remat: bool = False, last_only: bool = False
+            ) -> Tuple[jnp.ndarray, Optional[dict], jnp.ndarray]:
+    """Run the stack.  Returns (logits, new_caches, aux_loss).
+    ``last_only`` unembeds just the final position (serving prefill: the
+    full-vocab logits tensor over 1M tokens would dominate HBM)."""
+    pat = cfg.layer_pattern
+    x, positions, enc_out = _embed_inputs(cfg, params, batch, mode,
+                                          remat=remat)
+    aux_total = jnp.zeros((), jnp.float32)
+
+    def cycle_body(x_aux, xs):
+        x, aux = x_aux
+        lps, cs = xs
+        new_cs = []
+        for j, kind in enumerate(pat):
+            x, nc, a = apply_block(cfg, kind, lps[j], x, mode=mode,
+                                   positions=positions,
+                                   cache=None if cs is None else cs[j],
+                                   enc_out=enc_out, dispatch=dispatch)
+            new_cs.append(nc)
+            aux = aux + a
+        return (x, aux), tuple(new_cs)
+
+    body = jax.checkpoint(cycle_body) if (remat and mode == "train") else cycle_body
+
+    if caches is None:
+        (x, aux_total), _ = jax.lax.scan(
+            body, (x, aux_total), (params["layers"], None))
+    else:
+        (x, aux_total), new_stacked = jax.lax.scan(
+            body, (x, aux_total), (params["layers"], caches["layers"]))
+
+    new_rem = []
+    for j, lp in enumerate(params["rem_layers"]):
+        kind = pat[j % len(pat)]
+        c = None if caches is None else caches["rem_layers"][j]
+        x, nc, a = apply_block(cfg, kind, lp, x, mode=mode,
+                               positions=positions, cache=c,
+                               enc_out=enc_out, dispatch=dispatch)
+        new_rem.append(nc)
+        aux_total = aux_total + a
+
+    x = L.apply_norm(cfg, params["final_norm"], x)
+    if last_only:
+        x = x[:, -1:]
+    logits = L.unembed(cfg, params["embed"], x)
+    new_caches = None
+    if caches is not None:
+        new_caches = {"layers": new_stacked, "rem_layers": tuple(new_rem)}
+    return logits, new_caches, aux_total

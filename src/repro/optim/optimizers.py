@@ -1,0 +1,89 @@
+"""Minimal pytree optimizers (no optax dependency): SGD(+momentum), Adam.
+
+The paper trains clients with small-batch SGD (lr 0.01); Adam is provided
+for the large-arch training driver.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jnp.ndarray
+    m: Any            # momentum / first moment (or () for plain SGD)
+    v: Any            # second moment (Adam) or ()
+
+
+def _zeros_like_f32(tree):
+    return jax.tree_util.tree_map(lambda x: jnp.zeros(x.shape, jnp.float32),
+                                  tree)
+
+
+def sgd_init(params, momentum: float = 0.0) -> OptState:
+    m = _zeros_like_f32(params) if momentum else ()
+    return OptState(jnp.zeros((), jnp.int32), m, ())
+
+
+def sgd_update(params, grads, state: OptState, *, lr: float,
+               momentum: float = 0.0, weight_decay: float = 0.0
+               ) -> Tuple[Any, OptState]:
+    if weight_decay:
+        grads = jax.tree_util.tree_map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params)
+    if momentum:
+        m = jax.tree_util.tree_map(
+            lambda mm, g: momentum * mm + g.astype(jnp.float32),
+            state.m, grads)
+        upd = m
+    else:
+        m, upd = (), grads
+    params = jax.tree_util.tree_map(
+        lambda p, u: (p.astype(jnp.float32) - lr * u.astype(jnp.float32)
+                      ).astype(p.dtype), params, upd)
+    return params, OptState(state.step + 1, m, ())
+
+
+def adam_init(params) -> OptState:
+    return OptState(jnp.zeros((), jnp.int32), _zeros_like_f32(params),
+                    _zeros_like_f32(params))
+
+
+def adam_update(params, grads, state: OptState, *, lr: float,
+                b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+                weight_decay: float = 0.0) -> Tuple[Any, OptState]:
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    m = jax.tree_util.tree_map(
+        lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+        state.m, grads)
+    v = jax.tree_util.tree_map(
+        lambda vv, g: b2 * vv + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+        state.v, grads)
+    mh = jax.tree_util.tree_map(lambda x: x / (1 - b1 ** t), m)
+    vh = jax.tree_util.tree_map(lambda x: x / (1 - b2 ** t), v)
+
+    def upd(p, mh_, vh_):
+        u = mh_ / (jnp.sqrt(vh_) + eps)
+        if weight_decay:
+            u = u + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+    params = jax.tree_util.tree_map(upd, params, mh, vh)
+    return params, OptState(step, m, v)
+
+
+def make_optimizer(name: str, **kw) -> Tuple[Callable, Callable]:
+    """Returns (init_fn(params), update_fn(params, grads, state))."""
+    if name == "sgd":
+        mom = kw.get("momentum", 0.0)
+        return (lambda p: sgd_init(p, mom),
+                lambda p, g, s: sgd_update(p, g, s, lr=kw["lr"], momentum=mom,
+                                           weight_decay=kw.get("weight_decay", 0.0)))
+    if name == "adam":
+        return (adam_init,
+                lambda p, g, s: adam_update(p, g, s, lr=kw["lr"],
+                                            weight_decay=kw.get("weight_decay", 0.0)))
+    raise ValueError(name)

@@ -1,0 +1,91 @@
+"""LEO Walker-delta constellation simulator (paper §IV-A geometry:
+altitude 1300 km, inclination 53 deg, satellites evenly distributed per
+orbit, ground station with 10 deg minimum elevation).
+
+Positions are ECI-frame km vectors; the ground station rotates with Earth.
+Everything is vectorized jnp so the FL simulator can jit through it.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+R_EARTH_KM = 6371.0
+MU_KM3_S2 = 398600.4418          # Earth gravitational parameter
+OMEGA_EARTH = 7.2921159e-5       # rad/s
+
+
+@dataclass(frozen=True)
+class Constellation:
+    num_planes: int = 8
+    sats_per_plane: int = 8
+    altitude_km: float = 1300.0
+    inclination_deg: float = 53.0
+    phasing: float = 1.0          # Walker phasing factor
+
+    @property
+    def num_sats(self) -> int:
+        return self.num_planes * self.sats_per_plane
+
+    @property
+    def radius_km(self) -> float:
+        return R_EARTH_KM + self.altitude_km
+
+    @property
+    def period_s(self) -> float:
+        return 2.0 * math.pi * math.sqrt(self.radius_km ** 3 / MU_KM3_S2)
+
+    def positions(self, t_s) -> jnp.ndarray:
+        """Satellite ECI positions at time t (s): (num_sats, 3) km.
+        Index layout: sat i = plane * sats_per_plane + slot."""
+        P, S = self.num_planes, self.sats_per_plane
+        inc = math.radians(self.inclination_deg)
+        plane = jnp.arange(P)
+        slot = jnp.arange(S)
+        raan = 2.0 * math.pi * plane / P                            # (P,)
+        mean_anom = (2.0 * math.pi * slot / S)[None, :] \
+            + (2.0 * math.pi * self.phasing * plane / (P * S))[:, None]
+        u = mean_anom + 2.0 * math.pi * t_s / self.period_s         # (P,S)
+
+        cu, su = jnp.cos(u), jnp.sin(u)
+        cO, sO = jnp.cos(raan)[:, None], jnp.sin(raan)[:, None]
+        ci, si = math.cos(inc), math.sin(inc)
+        x = cu * cO - su * sO * ci
+        y = cu * sO + su * cO * ci
+        z = su * si
+        xyz = jnp.stack([x, y, z], axis=-1) * self.radius_km        # (P,S,3)
+        return xyz.reshape(P * S, 3)
+
+
+def ground_station_position(lat_deg: float = 30.0, lon_deg: float = 114.0,
+                            t_s=0.0) -> jnp.ndarray:
+    """ECI position of a ground station (rotates with Earth)."""
+    lat = math.radians(lat_deg)
+    lon0 = math.radians(lon_deg)
+    lon = lon0 + OMEGA_EARTH * t_s
+    return R_EARTH_KM * jnp.asarray([
+        math.cos(lat) * jnp.cos(lon),
+        math.cos(lat) * jnp.sin(lon),
+        jnp.full_like(jnp.asarray(lon), math.sin(lat)),
+    ]).reshape(3)
+
+
+def elevation_deg(sat_pos: jnp.ndarray, gs_pos: jnp.ndarray) -> jnp.ndarray:
+    """Elevation of satellites (N,3) above a ground station's horizon."""
+    rel = sat_pos - gs_pos[None, :]
+    up = gs_pos / jnp.linalg.norm(gs_pos)
+    sin_el = (rel @ up) / jnp.maximum(jnp.linalg.norm(rel, axis=-1), 1e-9)
+    return jnp.degrees(jnp.arcsin(jnp.clip(sin_el, -1.0, 1.0)))
+
+
+def visible(sat_pos: jnp.ndarray, gs_pos: jnp.ndarray,
+            min_elevation_deg: float = 10.0) -> jnp.ndarray:
+    return elevation_deg(sat_pos, gs_pos) >= min_elevation_deg
+
+
+def inter_sat_distance_km(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return jnp.linalg.norm(a - b, axis=-1)

@@ -1,0 +1,85 @@
+"""FedHC time & energy accounting (paper §II-C, Eq. 7-10).
+
+All functions are pure jnp over per-client vectors so the simulator can jit
+them.  Heterogeneous client compute (CPU frequency f_i) and channels are
+drawn once per experiment.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.orbits.links import LinkParams, comm_time_s, tx_energy_j
+
+
+@dataclass(frozen=True)
+class ComputeParams:
+    cycles_per_sample: float = 2.0e6      # Q
+    min_freq_hz: float = 1.0e8            # f_i range (satellite edge CPUs)
+    max_freq_hz: float = 1.0e9
+    eps0: float = 1.0e-10                 # epsilon_0 (Eq. 9 coefficient)
+
+
+def sample_freqs(rng, n: int, p: ComputeParams) -> jnp.ndarray:
+    u = jax.random.uniform(rng, (n,))
+    return p.min_freq_hz + u * (p.max_freq_hz - p.min_freq_hz)
+
+
+def compute_time_s(data_sizes, freqs, p: ComputeParams) -> jnp.ndarray:
+    """t_cmp_i = D_i * Q / f_i."""
+    return data_sizes.astype(jnp.float32) * p.cycles_per_sample / freqs
+
+
+def compute_energy_j(data_sizes, freqs, p: ComputeParams) -> jnp.ndarray:
+    """Eq. 9 summand: eps0 * f_i * t_cmp_i."""
+    return p.eps0 * freqs * compute_time_s(data_sizes, freqs, p)
+
+
+def cluster_round_costs(positions, ps_positions, assignment, participating,
+                        data_sizes, freqs, model_bits: float,
+                        lp: LinkParams, cp: ComputeParams
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """One intra-cluster FL round (Eq. 7 inner max + Eq. 8/9).
+
+    positions (C,3); ps_positions (C,3) = position of each client's PS.
+    Returns (round_time_s, round_energy_j); time is the synchronous-round
+    makespan max_i (t_cmp + t_com) over participating clients."""
+    part = participating.astype(jnp.float32)
+    d = jnp.linalg.norm(positions - ps_positions, axis=-1)
+    t_cmp = compute_time_s(data_sizes, freqs, cp)
+    t_com = comm_time_s(model_bits, d, lp)
+    t_round = jnp.max(jnp.where(participating, t_cmp + t_com, 0.0))
+    # energy: upload (Eq. 8) + local compute (Eq. 9); the PS broadcast back
+    # is counted as one more model transmission per participating client.
+    e = part * (2.0 * tx_energy_j(model_bits, d, lp)
+                + compute_energy_j(data_sizes, freqs, cp))
+    return t_round, jnp.sum(e)
+
+
+def ground_round_costs(ps_sat_positions, gs_position, model_bits: float,
+                       lp: LinkParams) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage 2 (Eq. 7 outer term): each cluster PS uploads to the ground
+    station and receives the global model back."""
+    d = jnp.linalg.norm(ps_sat_positions - gs_position[None, :], axis=-1)
+    t = comm_time_s(model_bits, d, lp, to_ground=True)
+    e = 2.0 * tx_energy_j(model_bits, d, lp, to_ground=True)
+    return jnp.max(t), jnp.sum(e)
+
+
+def cfedavg_round_costs(positions, server_position, participating,
+                        data_sizes, freqs, sample_bits: float,
+                        server_freq_hz: float, lp: LinkParams,
+                        cp: ComputeParams) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """C-FedAvg baseline: every client ships its RAW DATA to one central
+    satellite server which trains centrally (paper §IV-A)."""
+    d = jnp.linalg.norm(positions - server_position[None, :], axis=-1)
+    bits = data_sizes.astype(jnp.float32) * sample_bits
+    t_up = comm_time_s(1.0, d, lp) * bits        # bits / rate_i
+    t_train = jnp.sum(data_sizes) * cp.cycles_per_sample / server_freq_hz
+    t_round = jnp.max(jnp.where(participating, t_up, 0.0)) + t_train
+    e_up = lp.tx_power_w * t_up * participating.astype(jnp.float32)
+    e_train = cp.eps0 * server_freq_hz * t_train
+    return t_round, jnp.sum(e_up) + e_train

@@ -1,0 +1,46 @@
+"""Satellite link model (paper Eq. 6): r_i = B ln(1 + P0 h_i / N0).
+
+Channel gain follows free-space path loss, h = g0 / d^2 with d in km.
+Constants are in the ballpark of the paper's references [14], [15]; they are
+configurable so benchmarks can sweep them.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class LinkParams:
+    bandwidth_hz: float = 1.0e6       # B_i
+    tx_power_w: float = 0.5           # P_0
+    noise_w: float = 1.0e-10          # N_0
+    gain_km2: float = 4.0e-4          # g0: h_i = g0 / d_km^2
+    # ground-station links get a bigger dish => higher effective gain
+    gs_gain_boost: float = 4.0
+
+
+def channel_gain(dist_km: jnp.ndarray, p: LinkParams,
+                 to_ground: bool = False) -> jnp.ndarray:
+    g = p.gain_km2 / jnp.maximum(dist_km, 1.0) ** 2
+    return g * (p.gs_gain_boost if to_ground else 1.0)
+
+
+def rate_bps(dist_km: jnp.ndarray, p: LinkParams,
+             to_ground: bool = False) -> jnp.ndarray:
+    """Eq. 6 (natural log, as printed in the paper)."""
+    h = channel_gain(dist_km, p, to_ground)
+    return p.bandwidth_hz * jnp.log(1.0 + p.tx_power_w * h / p.noise_w)
+
+
+def comm_time_s(bits: float, dist_km: jnp.ndarray, p: LinkParams,
+                to_ground: bool = False) -> jnp.ndarray:
+    """t_com = zeta / r_i."""
+    return bits / jnp.maximum(rate_bps(dist_km, p, to_ground), 1.0)
+
+
+def tx_energy_j(bits: float, dist_km: jnp.ndarray, p: LinkParams,
+                to_ground: bool = False) -> jnp.ndarray:
+    """Eq. 8 summand: P0 * |w| / r_i."""
+    return p.tx_power_w * comm_time_s(bits, dist_km, p, to_ground)

@@ -1,0 +1,159 @@
+"""Logical sharding rules: param-name pattern -> PartitionSpec, with
+divisibility-checked fallbacks.
+
+Roles per tensor dim (resolved to mesh axes by a placement):
+    tp    - tensor-parallel dim (d_ff, q/kv projection output, vocab)
+    fsdp  - fully-sharded dim (weight input dim; only in pod-client or
+            serve-big placements where the data axis is free for FSDP)
+    none  - replicated
+
+Placements:
+    client-data : one FL client per data-axis index.  Params get a leading
+                  clients dim sharded over ("pod","data"); within a client
+                  only `tp` shards (over "model").
+    client-pod  : one FL client per pod.  Clients dim over "pod"; inside a
+                  client `fsdp`->"data", `tp`->"model".
+    serve       : no clients dim.  `tp`->"model"; `fsdp`->"data" only when
+                  ``fsdp_params=True`` (big archs whose weights don't fit
+                  replicated over the data axis).
+
+Any dim whose size does not divide the product of its mesh-axis sizes falls
+back to replicated (GSPMD would pad, but padded shards waste HBM — we prefer
+an explicit, predictable fallback).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+# param leaf name -> per-dim roles (for the base, unstacked shape)
+_BASE_RULES = {
+    # embeddings
+    "embedding": ("tp", "fsdp"),
+    "unembed": ("fsdp", "tp"),
+    "enc_pos": (None, None),
+    "proj": ("fsdp", "tp"),
+    # attention
+    "wq": ("fsdp", "tp"),
+    "wk": ("fsdp", "tp"),
+    "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "bq": ("tp",),
+    "bk": ("tp",),
+    "bv": ("tp",),
+    # mlp
+    "w_gate": ("fsdp", "tp"),
+    "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (leading experts dim replicated; per-expert TP)
+    "router": ("fsdp", None),
+    # ssd
+    "in_proj": ("fsdp", "tp"),
+    "conv_w": (None, "tp"),
+    "conv_b": ("tp",),
+    "A_log": (None,),
+    "D": (None,),
+    "dt_bias": (None,),
+    "norm_scale": (None,),
+    "out_proj": ("tp", "fsdp"),
+    # rglru
+    "w_x": ("fsdp", "tp"),
+    "lru_wa": ("fsdp", "tp"),
+    "lru_wx": ("fsdp", "tp"),
+    "lru_ba": ("tp",),
+    "lru_bx": ("tp",),
+    "lru_lambda": ("tp",),
+    "w_out": ("tp", "fsdp"),
+    # norms
+    "scale": (None,),
+}
+# MoE expert weights share names with the dense MLP but have a leading
+# experts dim; handled by ndim mismatch logic below.
+
+
+def _axis_size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+def _resolve(role: Optional[str], tp_axes, fsdp_axes):
+    if role == "tp":
+        return tp_axes
+    if role == "fsdp":
+        return fsdp_axes
+    return None
+
+
+def spec_for_param(path_keys: Tuple[str, ...], shape: Tuple[int, ...],
+                   mesh: Mesh, *, tp_axes="model", fsdp_axes=None,
+                   client_axes=None, client_stacked: bool = False) -> P:
+    """Compute the PartitionSpec for one param leaf.
+
+    path_keys: tuple of str path components (dict keys / tuple indices as
+    str).  client_stacked: the leaf has an extra leading clients dim."""
+    name = path_keys[-1]
+    roles = _BASE_RULES.get(name)
+    if roles is None:
+        roles = (None,) * len(shape)
+
+    ndim = len(shape)
+    n_lead = ndim - len(roles)
+    lead_roles = []
+    if client_stacked:
+        lead_roles.append("client")
+        n_lead -= 1
+    # remaining leading dims: scan-cycle stacking and/or experts dim
+    lead_roles.extend([None] * n_lead)
+    full_roles = tuple(lead_roles) + roles
+
+    entries = []
+    for dim, role in zip(shape, full_roles):
+        if role == "client":
+            axes = client_axes
+        else:
+            axes = _resolve(role, tp_axes, fsdp_axes)
+        if axes is not None and dim % _axis_size(mesh, axes) != 0:
+            axes = None                      # divisibility fallback
+        entries.append(axes)
+    # trim trailing Nones for tidiness
+    while entries and entries[-1] is None:
+        entries.pop()
+    return P(*entries)
+
+
+def tree_param_specs(params, mesh: Mesh, *, tp_axes="model", fsdp_axes=None,
+                     client_axes=None, client_stacked: bool = False):
+    """PartitionSpec pytree matching ``params`` (works on ShapeDtypeStructs
+    or concrete arrays)."""
+
+    def walk(tree, keys):
+        if isinstance(tree, dict):
+            return {k: walk(v, keys + (str(k),)) for k, v in tree.items()}
+        if isinstance(tree, (tuple, list)):
+            out = [walk(v, keys + (str(i),)) for i, v in enumerate(tree)]
+            return tuple(out) if isinstance(tree, tuple) else out
+        if tree is None:
+            return None
+        return spec_for_param(keys, tree.shape, mesh, tp_axes=tp_axes,
+                              fsdp_axes=fsdp_axes, client_axes=client_axes,
+                              client_stacked=client_stacked)
+
+    return walk(params, ())
+
+
+def tree_shardings(specs, mesh: Mesh):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def batch_spec(batch_axes) -> P:
+    """Spec for (global_batch, ...) data arrays."""
+    return P(batch_axes)

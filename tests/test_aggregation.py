@@ -1,0 +1,107 @@
+"""FedHC aggregation semantics (Eq. 5, Eq. 12, two-stage hierarchy)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import aggregation as agg
+
+
+def _stack(rng, c=8, shapes=((4, 3), (5,))):
+    ks = jax.random.split(rng, len(shapes))
+    return {f"p{i}": jax.random.normal(k, (c,) + s)
+            for i, (k, s) in enumerate(zip(ks, shapes))}
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(2, 12), st.integers(1, 4), st.integers(0, 10_000))
+def test_loss_weights_sum_to_one_per_cluster(c, k, seed):
+    rng = jax.random.PRNGKey(seed)
+    losses = jax.random.uniform(rng, (c,), minval=0.1, maxval=5.0)
+    assignment = jax.random.randint(jax.random.fold_in(rng, 1), (c,), 0, k)
+    w = agg.loss_weights(losses, assignment.astype(jnp.int32), k)
+    sums = np.zeros(k)
+    for i in range(c):
+        sums[int(assignment[i])] += float(w[i])
+    for kk in range(k):
+        if (np.asarray(assignment) == kk).any():
+            assert sums[kk] == pytest.approx(1.0, abs=1e-5)
+
+
+def test_loss_weights_prefer_low_loss():
+    losses = jnp.asarray([0.5, 2.0, 1.0, 1.0])
+    assignment = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    w = agg.loss_weights(losses, assignment, 2)
+    assert float(w[0]) > float(w[1])           # lower loss => higher weight
+    assert float(w[2]) == pytest.approx(float(w[3]), abs=1e-6)
+
+
+def test_cluster_aggregate_is_convex_combination():
+    rng = jax.random.PRNGKey(0)
+    stack = _stack(rng, c=6)
+    assignment = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    losses = jnp.ones((6,))
+    w = agg.loss_weights(losses, assignment, 2)
+    out = agg.cluster_aggregate(stack, w, assignment, 2)
+    # equal losses => plain mean per cluster
+    for key in stack:
+        np.testing.assert_allclose(
+            np.asarray(out[key][0]), np.asarray(stack[key][:3].mean(0)),
+            rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(
+            np.asarray(out[key][1]), np.asarray(stack[key][3:].mean(0)),
+            rtol=1e-5, atol=1e-5)
+
+
+def test_global_aggregate_matches_eq5():
+    rng = jax.random.PRNGKey(1)
+    stack = _stack(rng, c=3)
+    sizes = jnp.asarray([1.0, 2.0, 3.0])
+    out = agg.global_aggregate(stack, sizes)
+    for key in stack:
+        want = (np.asarray(stack[key])
+                * (np.asarray(sizes) / 6.0).reshape(-1, 1, 1)
+                if stack[key].ndim == 3 else
+                np.asarray(stack[key]) * (np.asarray(sizes) / 6.0).reshape(-1, 1))
+        np.testing.assert_allclose(np.asarray(out[key]), want.sum(0),
+                                   rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 10_000))
+def test_hierarchical_round_permutation_invariance(seed):
+    """Relabeling clients permutes outputs identically (no positional bias)."""
+    rng = jax.random.PRNGKey(seed)
+    c, k = 6, 2
+    stack = _stack(rng, c=c, shapes=((3,),))
+    losses = jax.random.uniform(jax.random.fold_in(rng, 1), (c,), minval=0.2)
+    sizes = jnp.ones((c,))
+    assignment = jnp.asarray([0, 1, 0, 1, 0, 1], jnp.int32)
+    out = agg.hierarchical_round(stack, losses, sizes, assignment, k,
+                                 do_global=False)
+    perm = np.random.RandomState(seed).permutation(c)
+    stack_p = {kk: v[perm] for kk, v in stack.items()}
+    out_p = agg.hierarchical_round(stack_p, losses[perm], sizes[perm],
+                                   assignment[perm], k, do_global=False)
+    np.testing.assert_allclose(np.asarray(out["p0"])[perm],
+                               np.asarray(out_p["p0"]), rtol=1e-4, atol=1e-5)
+
+
+def test_hierarchical_global_broadcasts_same_model():
+    rng = jax.random.PRNGKey(3)
+    stack = _stack(rng, c=4, shapes=((2, 2),))
+    losses = jnp.asarray([1.0, 2.0, 0.5, 1.5])
+    sizes = jnp.ones((4,))
+    assignment = jnp.asarray([0, 0, 1, 1], jnp.int32)
+    out = agg.hierarchical_round(stack, losses, sizes, assignment, 2,
+                                 do_global=True)
+    x = np.asarray(out["p0"])
+    for i in range(1, 4):
+        np.testing.assert_allclose(x[i], x[0], rtol=1e-5, atol=1e-6)
+
+
+def test_fedavg_weights_data_size():
+    sizes = jnp.asarray([1.0, 3.0])
+    w = agg.data_weights(sizes)
+    np.testing.assert_allclose(np.asarray(w), [0.25, 0.75])

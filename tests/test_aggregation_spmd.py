@@ -1,0 +1,50 @@
+"""SPMD grouped-psum aggregation == pytree oracle (run in a subprocess with
+8 fake devices so the main pytest process keeps a single CPU device)."""
+import json
+import subprocess
+import sys
+import textwrap
+
+SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core import aggregation as agg
+    from repro.core.aggregation_spmd import make_spmd_aggregator
+
+    mesh = jax.make_mesh((8,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    C, K = 8, 2
+    clusters = ((0, 1, 2, 3), (4, 5, 6, 7))
+    rng = jax.random.PRNGKey(0)
+    stack = {"a": jax.random.normal(rng, (C, 4, 3)),
+             "b": jax.random.normal(jax.random.fold_in(rng, 1), (C, 5))}
+    losses = jax.random.uniform(jax.random.fold_in(rng, 2), (C,),
+                                minval=0.2, maxval=3.0)
+    sizes = jnp.ones((C,)) * 2.0
+    assignment = jnp.asarray([0, 0, 0, 0, 1, 1, 1, 1], jnp.int32)
+
+    specs = {"a": P("data"), "b": P("data")}
+    out = {}
+    with mesh:
+        fn = make_spmd_aggregator(mesh, "data", clusters, specs)
+        for do_global in (False, True):
+            got = jax.jit(fn)(stack, 1.0 / losses, sizes,
+                              jnp.asarray(do_global))
+            want = agg.hierarchical_round(stack, losses, sizes, assignment,
+                                          K, do_global=do_global)
+            err = max(float(jnp.max(jnp.abs(got[k] - want[k])))
+                      for k in stack)
+            out[str(do_global)] = err
+    print(json.dumps(out))
+""")
+
+
+def test_spmd_matches_pytree_oracle():
+    res = subprocess.run([sys.executable, "-c", SCRIPT], capture_output=True,
+                         text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    errs = json.loads(res.stdout.strip().splitlines()[-1])
+    assert errs["False"] < 1e-5, errs
+    assert errs["True"] < 1e-5, errs

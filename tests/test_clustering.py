@@ -1,0 +1,74 @@
+"""Satellite-clustered PS selection (paper §III-B, Eq. 13-15)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering as cl
+
+
+def _blobs(rng, k=4, per=25, dim=3, spread=0.1):
+    centers = jax.random.normal(rng, (k, dim)) * 5.0
+    pts = centers[:, None] + spread * jax.random.normal(
+        jax.random.fold_in(rng, 1), (k, per, dim))
+    return centers, pts.reshape(k * per, dim)
+
+
+def test_kmeans_recovers_blobs():
+    rng = jax.random.PRNGKey(0)
+    centers, x = _blobs(rng)
+    res = cl.kmeans(x, 4, jax.random.PRNGKey(7))
+    # every point's centroid is the nearest one (local optimum property)
+    d = cl.pairwise_sq_dist(x, res.centroids)
+    np.testing.assert_array_equal(np.asarray(res.assignment),
+                                  np.argmin(np.asarray(d), 1))
+    # Eq. 15 fired before the iteration cap
+    assert int(res.iterations) < 32
+
+
+def test_ps_is_nearest_to_centroid():
+    rng = jax.random.PRNGKey(1)
+    _, x = _blobs(rng, k=3, per=20)
+    res = cl.kmeans(x, 3, jax.random.PRNGKey(3))
+    d = np.asarray(cl.pairwise_sq_dist(x, res.centroids))
+    a = np.asarray(res.assignment)
+    for k in range(3):
+        members = np.where(a == k)[0]
+        ps = int(res.ps_index[k])
+        assert ps in members
+        assert d[ps, k] == pytest.approx(d[members, k].min(), rel=1e-5)
+
+
+def test_centroid_update_empty_cluster_kept():
+    x = jnp.ones((4, 2))
+    assignment = jnp.zeros((4,), jnp.int32)     # cluster 1 empty
+    old = jnp.asarray([[0.0, 0.0], [9.0, 9.0]])
+    new = cl._update_centroids(x, assignment, old)
+    np.testing.assert_allclose(np.asarray(new[0]), [1.0, 1.0])
+    np.testing.assert_allclose(np.asarray(new[1]), [9.0, 9.0])
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(2, 6), st.integers(8, 40), st.integers(0, 10_000))
+def test_kmeans_assignment_is_argmin_property(k, n, seed):
+    rng = jax.random.PRNGKey(seed)
+    x = jax.random.normal(rng, (n, 3))
+    res = cl.kmeans(x, min(k, n), jax.random.fold_in(rng, 1), iters=8)
+    d = np.asarray(cl.pairwise_sq_dist(x, res.centroids))
+    np.testing.assert_array_equal(np.asarray(res.assignment), d.argmin(1))
+
+
+def test_dropout_rate():
+    assignment = jnp.asarray([0, 0, 0, 1, 1, 1], jnp.int32)
+    part = jnp.asarray([True, True, False, False, False, True])
+    d = cl.dropout_rate(part, assignment, 2)
+    np.testing.assert_allclose(np.asarray(d), [1 / 3, 2 / 3], atol=1e-6)
+
+
+def test_balanced_clusters_partition():
+    a = jnp.asarray([0, 0, 0, 0, 0, 1, 1, 2], jnp.int32)   # unbalanced
+    groups = cl.balanced_clusters(a, 2, 4)
+    flat = sorted(int(i) for g in groups for i in g)
+    assert flat == list(range(8))
+    assert all(len(g) == 4 for g in groups)

@@ -1,0 +1,108 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps (interpret=True
+executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ------------------------------------------------------------ weighted_agg
+
+@pytest.mark.parametrize("C,P", [(2, 64), (16, 1000), (8, 4096), (5, 17)])
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_weighted_agg_sweep(C, P, dt):
+    rng = jax.random.PRNGKey(C * 1000 + P)
+    s = jax.random.normal(rng, (C, P)).astype(dt)
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (C,))
+    got = ops.weighted_agg(s, w, interpret=True)
+    want = ref.weighted_agg_ref(s, w)
+    tol = 1e-5 if dt == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 24), st.integers(1, 3000), st.integers(0, 10**6))
+def test_weighted_agg_property(C, P, seed):
+    rng = jax.random.PRNGKey(seed)
+    s = jax.random.normal(rng, (C, P))
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (C,))
+    got = ops.weighted_agg(s, w, interpret=True)
+    want = ref.weighted_agg_ref(s, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+
+
+def test_weighted_agg_tree():
+    rng = jax.random.PRNGKey(0)
+    tree = {"a": jax.random.normal(rng, (4, 3, 5)),
+            "b": jax.random.normal(jax.random.fold_in(rng, 1), (4, 7))}
+    w = jnp.asarray([0.1, 0.2, 0.3, 0.4])
+    got = ops.weighted_agg_tree(tree, w, interpret=True)
+    for k in tree:
+        want = jnp.einsum("c...,c->...", tree[k], w)
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# --------------------------------------------------------- flash attention
+
+CASES = [
+    # B, Hq, Hkv, Sq, Sk, D, causal, window, softcap
+    (1, 4, 2, 128, 128, 64, True, 0, 0.0),
+    (2, 4, 4, 96, 96, 32, True, 0, 50.0),          # softcap (gemma2)
+    (1, 8, 2, 256, 256, 64, True, 64, 0.0),        # sliding window
+    (1, 2, 1, 1, 300, 64, True, 0, 0.0),           # decode: Sq=1
+    (1, 2, 1, 1, 300, 64, True, 128, 0.0),         # decode + window
+    (1, 2, 2, 128, 128, 64, False, 0, 0.0),        # bidirectional (encoder)
+    (2, 2, 2, 70, 70, 128, True, 0, 0.0),          # non-multiple lengths
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dt", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(case, dt):
+    B, Hq, Hkv, Sq, Sk, D, causal, window, cap = case
+    rng = jax.random.PRNGKey(hash(case) % 2**31)
+    q = jax.random.normal(rng, (B, Hq, Sq, D)).astype(dt)
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (B, Hkv, Sk, D)).astype(dt)
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (B, Hkv, Sk, D)).astype(dt)
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=cap, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal, window=window,
+                                   softcap=cap)
+    tol = 3e-5 if dt == jnp.float32 else 4e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_block_shape_independence():
+    """Result must not depend on BlockSpec tiling."""
+    rng = jax.random.PRNGKey(9)
+    q = jax.random.normal(rng, (1, 2, 200, 64))
+    k = jax.random.normal(jax.random.fold_in(rng, 1), (1, 2, 200, 64))
+    v = jax.random.normal(jax.random.fold_in(rng, 2), (1, 2, 200, 64))
+    a = ops.flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    b = ops.flash_attention(q, k, v, block_q=64, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-5,
+                               atol=2e-5)
+
+
+# ------------------------------------------------------------ kmeans assign
+
+@pytest.mark.parametrize("N,D,K", [(100, 3, 4), (513, 10, 7), (64, 128, 16),
+                                   (1000, 3, 5)])
+def test_kmeans_assign_sweep(N, D, K):
+    rng = jax.random.PRNGKey(N + D + K)
+    x = jax.random.normal(rng, (N, D))
+    c = jax.random.normal(jax.random.fold_in(rng, 1), (K, D))
+    a, d = ops.kmeans_assign(x, c, interpret=True)
+    ar, dr = ref.kmeans_assign_ref(x, c)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(ar))
+    np.testing.assert_allclose(np.asarray(d), np.asarray(dr), rtol=1e-4,
+                               atol=1e-4)

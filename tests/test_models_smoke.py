@@ -1,0 +1,93 @@
+"""Per-architecture smoke tests: reduced same-family variant (<=2 layers or
+one pattern cycle, d_model<=256, <=4 experts) runs one forward + one train
+step on CPU; asserts output shapes and no NaNs.  All 10 assigned archs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_NAMES, get_config, smoke_variant
+from repro.models import init_params, loss_fn
+from repro.models.transformer import forward
+from repro.optim import sgd_init, sgd_update
+
+B, S = 2, 64
+
+
+def _batch(cfg, rng):
+    toks = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": toks}
+    if cfg.frontend == "vision":
+        batch["patch_embeds"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(rng, 1), (B, cfg.frontend_len, cfg.d_model))
+    if cfg.frontend == "audio":
+        batch["frames"] = 0.1 * jax.random.normal(
+            jax.random.fold_in(rng, 2), (B, cfg.frontend_len, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_smoke_forward_and_train_step(arch):
+    cfg = smoke_variant(get_config(arch))
+    assert cfg.num_layers <= 3 and cfg.d_model <= 256
+    if cfg.num_experts:
+        assert cfg.num_experts <= 4
+    rng = jax.random.PRNGKey(0)
+    params = init_params(cfg, rng)
+    batch = _batch(cfg, jax.random.fold_in(rng, 5))
+
+    logits, _, aux = forward(cfg, params, batch, mode="train")
+    exp_len = S + (cfg.frontend_len if cfg.frontend == "vision" else 0)
+    assert logits.shape == (B, exp_len, cfg.vocab_padded)
+    # padded vocab entries masked out
+    if cfg.vocab_padded != cfg.vocab_size:
+        assert float(logits[..., cfg.vocab_size:].max()) < -1e29
+    assert bool(jnp.isfinite(logits).all()), f"{arch}: non-finite logits"
+
+    loss, metrics = loss_fn(cfg, params, batch)
+    assert np.isfinite(float(loss))
+
+    grads = jax.grad(lambda p: loss_fn(cfg, p, batch)[0])(params)
+    flat = jax.tree_util.tree_leaves(grads)
+    assert all(bool(jnp.isfinite(g).all()) for g in flat), f"{arch}: NaN grad"
+
+    new_params, _ = sgd_update(params, grads, sgd_init(params), lr=0.01)
+    loss2, _ = loss_fn(cfg, new_params, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCH_NAMES)
+def test_full_config_matches_assignment(arch):
+    """The full-size configs carry the exact assigned hyper-parameters."""
+    cfg = get_config(arch)
+    expected = {
+        "gemma2-2b": (26, 2304, 8, 4, 9216, 256000),
+        "grok-1-314b": (64, 6144, 48, 8, 32768, 131072),
+        "h2o-danube-1.8b": (24, 2560, 32, 8, 6912, 32000),
+        "granite-3-8b": (40, 4096, 32, 8, 12800, 49155),
+        "whisper-large-v3": (32, 1280, 20, 20, 5120, 51866),
+        "pixtral-12b": (40, 5120, 32, 8, 14336, 131072),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+        "qwen2-72b": (80, 8192, 64, 8, 29568, 152064),
+        "mixtral-8x22b": (56, 6144, 48, 8, 16384, 32768),
+        "mamba2-1.3b": (48, 2048, 0, 0, 0, 50280),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected, (arch, got, expected)
+    assert cfg.citation
+
+
+def test_param_counts_in_expected_ballpark():
+    """Analytic parameter counts should land near the models' nameplates."""
+    expect = {"gemma2-2b": (2e9, 4e9), "qwen2-72b": (60e9, 80e9),
+              "mixtral-8x22b": (120e9, 155e9), "grok-1-314b": (260e9, 340e9),
+              "mamba2-1.3b": (1e9, 1.6e9), "pixtral-12b": (10e9, 14e9)}
+    for arch, (lo, hi) in expect.items():
+        n = get_config(arch).param_count()
+        assert lo < n < hi, (arch, n)
+
+
+def test_moe_active_params_less_than_total():
+    cfg = get_config("mixtral-8x22b")
+    assert cfg.active_param_count() < 0.5 * cfg.param_count()

@@ -1,0 +1,99 @@
+"""Orbital simulator + link model (paper §II, Eq. 6)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.orbits import constellation as C
+from repro.orbits import links as L
+from repro.orbits import cost as cost_lib
+
+
+def test_positions_on_orbit_shell():
+    c = C.Constellation(num_planes=4, sats_per_plane=8)
+    for t in (0.0, 600.0, 3600.0):
+        p = c.positions(t)
+        r = np.linalg.norm(np.asarray(p), axis=1)
+        np.testing.assert_allclose(r, c.radius_km, rtol=1e-5)
+
+
+def test_orbital_period_plausible():
+    c = C.Constellation(altitude_km=1300.0)
+    # ~111 min for 1300 km LEO
+    assert 100 * 60 < c.period_s < 125 * 60
+
+
+def test_positions_periodic():
+    c = C.Constellation(num_planes=2, sats_per_plane=4)
+    p0 = np.asarray(c.positions(0.0))
+    pT = np.asarray(c.positions(c.period_s))
+    # f32 angle arithmetic at radius ~7700 km: allow metre-level slack
+    np.testing.assert_allclose(p0, pT, atol=0.05)
+
+
+def test_visibility_elevation_gate():
+    gs = C.ground_station_position(lat_deg=0.0, lon_deg=0.0, t_s=0.0)
+    # satellite straight overhead: elevation ~90
+    overhead = np.asarray(gs) * (C.R_EARTH_KM + 1300) / C.R_EARTH_KM
+    el = C.elevation_deg(jnp.asarray(overhead)[None], gs)
+    assert float(el[0]) > 85.0
+    # satellite on the opposite side of Earth: below horizon
+    far = -overhead
+    el2 = C.elevation_deg(jnp.asarray(far)[None], gs)
+    assert float(el2[0]) < 0.0
+    assert not bool(C.visible(jnp.asarray(far)[None], gs)[0])
+
+
+def test_rate_decreases_with_distance():
+    p = L.LinkParams()
+    d = jnp.asarray([100.0, 500.0, 2000.0])
+    r = np.asarray(L.rate_bps(d, p))
+    assert r[0] > r[1] > r[2] > 0
+
+
+def test_comm_time_and_energy_scale_with_bits():
+    p = L.LinkParams()
+    t1 = float(L.comm_time_s(1e6, jnp.asarray(500.0), p))
+    t2 = float(L.comm_time_s(2e6, jnp.asarray(500.0), p))
+    assert t2 == pytest.approx(2 * t1, rel=1e-6)
+    e = float(L.tx_energy_j(1e6, jnp.asarray(500.0), p))
+    assert e == pytest.approx(p.tx_power_w * t1, rel=1e-6)
+
+
+def test_round_costs_makespan_uses_slowest_participant():
+    cp = cost_lib.ComputeParams()
+    lp = L.LinkParams()
+    pos = jnp.zeros((3, 3))
+    ps = jnp.zeros((3, 3))
+    pos = pos.at[1].set(jnp.asarray([2000.0, 0.0, 0.0]))   # far client
+    sizes = jnp.asarray([10.0, 10.0, 10.0])
+    freqs = jnp.asarray([1e9, 1e8, 1e9])                   # client 1 slow too
+    part_all = jnp.asarray([True, True, True])
+    part_no1 = jnp.asarray([True, False, True])
+    t_all, e_all = cost_lib.cluster_round_costs(
+        pos, ps, jnp.zeros((3,), jnp.int32), part_all, sizes, freqs,
+        1e6, lp, cp)
+    t_no1, e_no1 = cost_lib.cluster_round_costs(
+        pos, ps, jnp.zeros((3,), jnp.int32), part_no1, sizes, freqs,
+        1e6, lp, cp)
+    assert float(t_all) > float(t_no1)          # straggler sets makespan
+    assert float(e_all) > float(e_no1)          # extra participant energy
+
+
+def test_cfedavg_data_upload_dominates():
+    """Raw-data upload must cost far more than model upload (paper's
+    motivation for on-orbit FL)."""
+    cp = cost_lib.ComputeParams()
+    lp = L.LinkParams()
+    pos = 500.0 * jnp.ones((4, 3)) / np.sqrt(3)
+    server = jnp.zeros((3,))
+    sizes = jnp.full((4,), 128.0)
+    freqs = jnp.full((4,), 5e8)
+    part = jnp.ones((4,), bool)
+    t_c, e_c = cost_lib.cfedavg_round_costs(pos, server, part, sizes, freqs,
+                                            sample_bits=28 * 28 * 32.0,
+                                            server_freq_hz=1e9, lp=lp, cp=cp)
+    t_f, e_f = cost_lib.cluster_round_costs(pos, jnp.zeros((4, 3)) + pos,
+                                            jnp.zeros((4,), jnp.int32), part,
+                                            sizes, freqs, 1e6, lp, cp)
+    assert float(e_c) > float(e_f)

@@ -1,0 +1,71 @@
+"""Sharding rules: divisibility fallbacks and spec structure (no devices
+needed — Mesh objects are built from an abstract 1-device mesh where
+possible; we use mesh.shape only)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.sharding import rules
+
+
+class FakeMesh:
+    """Duck-typed mesh: rules only reads .shape."""
+    def __init__(self, shape_dict):
+        self.shape = shape_dict
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+
+
+def test_mlp_weight_sharded_tp():
+    s = rules.spec_for_param(("layers", "0", "mlp", "w_gate"), (2304, 9216),
+                             MESH, tp_axes="model")
+    assert s == P(None, "model")
+
+
+def test_fsdp_enabled_for_pod_client():
+    s = rules.spec_for_param(("mlp", "w_gate"), (8192, 29568), MESH,
+                             tp_axes="model", fsdp_axes="data")
+    assert s == P("data", "model")
+
+
+def test_divisibility_fallback_replicates():
+    # 9 does not divide 16 -> replicated
+    s = rules.spec_for_param(("attn", "wq"), (100, 9), MESH,
+                             tp_axes="model")
+    assert s == P()
+
+
+def test_stacked_and_client_dims_prepended():
+    # stacked layers: leading cycles dim; client stacking adds client axes
+    s = rules.spec_for_param(("layers", "0", "attn", "wq"), (13, 2304, 2048),
+                             MESH, tp_axes="model")
+    assert s == P(None, None, "model")
+    s2 = rules.spec_for_param(("layers", "0", "attn", "wq"),
+                              (16, 13, 2304, 2048), MESH, tp_axes="model",
+                              client_axes=("data",), client_stacked=True)
+    assert s2 == P(("data",), None, None, "model")
+
+
+def test_moe_expert_weights_per_expert_tp():
+    # (E, d, f): experts replicated (8 % 16 != 0), d_ff TP
+    s = rules.spec_for_param(("moe", "w_gate"), (8, 6144, 32768), MESH,
+                             tp_axes="model")
+    assert s == P(None, None, "model")
+
+
+def test_norm_scale_replicated():
+    s = rules.spec_for_param(("norm1", "scale"), (2304,), MESH)
+    assert s == P()
+
+
+def test_tree_specs_walk():
+    params = {"embed": {"embedding": jax.ShapeDtypeStruct((256000, 2304),
+                                                          jnp.bfloat16)},
+              "layers": ({"mlp": {"w_down": jax.ShapeDtypeStruct(
+                  (13, 9216, 2304), jnp.bfloat16)}},)}
+    specs = rules.tree_param_specs(params, MESH, tp_axes="model")
+    assert specs["embed"]["embedding"] == P("model")   # vocab tp, d replicated-trimmed
+    assert specs["layers"][0]["mlp"]["w_down"] == P(None, "model")
