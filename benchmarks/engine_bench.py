@@ -1,0 +1,80 @@
+"""Engine-vs-legacy wall-clock: the scan-compiled round engine
+(`core/engine.py`) against the host-side Python loop (`run_fl_legacy`) on
+the same config, plus the vmap-over-seeds sweep throughput.
+
+The legacy loop pays a device->host sync every round (``float(t_r)``,
+``float(jnp.max(d_r))`` ...); the engine runs the whole horizon as one XLA
+program and fetches the stacked history once.  Reported numbers:
+
+    compile_s   first engine call (trace + XLA compile, amortized once)
+    engine_s    steady-state engine wall-clock (second call, cached jit)
+    legacy_s    legacy loop wall-clock
+    speedup     legacy_s / engine_s
+
+    PYTHONPATH=src python -m benchmarks.engine_bench [--rounds N]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+from repro.core import engine
+from repro.core.fedhc import FLRunConfig, run_fl_legacy
+
+
+def bench(method: str = "fedhc", rounds: int = 60, num_clients: int = 16,
+          seeds: int = 4) -> dict:
+    cfg = FLRunConfig(method=method, num_clients=num_clients,
+                      num_clusters=3, rounds=rounds, eval_every=10,
+                      samples_per_client=64, local_steps=2, eval_size=512)
+
+    t0 = time.time()
+    engine.run(cfg)
+    compile_s = time.time() - t0          # includes trace + compile
+
+    t0 = time.time()
+    h_eng = engine.run(cfg)
+    engine_s = time.time() - t0           # cached executable
+
+    t0 = time.time()
+    h_leg = run_fl_legacy(cfg)
+    legacy_s = time.time() - t0
+
+    t0 = time.time()
+    sweep = engine.run_many_seeds(cfg, seeds=tuple(range(seeds)))
+    sweep_s = time.time() - t0            # includes vmap compile
+
+    return {
+        "method": method, "rounds": rounds, "num_clients": num_clients,
+        "compile_s": round(compile_s, 2),
+        "engine_s": round(engine_s, 2),
+        "legacy_s": round(legacy_s, 2),
+        "speedup": round(legacy_s / max(engine_s, 1e-9), 2),
+        "sweep_seeds": seeds,
+        "sweep_s": round(sweep_s, 2),
+        "sweep_s_per_seed": round(sweep_s / seeds, 2),
+        "final_acc_engine": round(h_eng["acc"][-1], 4),
+        "final_acc_legacy": round(h_leg["acc"][-1], 4),
+    }
+
+
+def main(rounds: int = 60, out_path: str = "results/engine_bench.json"):
+    r = bench(rounds=rounds)
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(r, f, indent=2)
+    print(f"[engine] {r['method']} {r['num_clients']} clients x "
+          f"{r['rounds']} rounds")
+    print(f"  compile {r['compile_s']}s | engine {r['engine_s']}s | "
+          f"legacy {r['legacy_s']}s | speedup {r['speedup']}x")
+    print(f"  {r['sweep_seeds']}-seed vmap sweep {r['sweep_s']}s "
+          f"({r['sweep_s_per_seed']}s/seed)")
+    return r
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--rounds", type=int, default=60)
+    main(rounds=ap.parse_args().rounds)

@@ -12,7 +12,7 @@ import os
 import time
 
 from benchmarks.fl_common import DATASETS, KS, METHODS, make_cfg
-from repro.core.fedhc import run_fl
+from repro.core.engine import run as run_fl   # scan-compiled engine
 
 
 def run(out_path="results/fig3_accuracy.json", datasets=("mnist-like",

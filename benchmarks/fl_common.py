@@ -7,11 +7,15 @@ the (configurable) link constants.
 """
 from __future__ import annotations
 
+from repro.core import strategies as strat_lib
 from repro.core.fedhc import FLRunConfig
 from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
 
 NUM_CLIENTS = 32
+# the paper's Fig. 3 / Table I grid (the fedhc-nomaml ablation is extra);
+# every entry must exist in the strategy registry
 METHODS = ("c-fedavg", "h-base", "fedce", "fedhc")
+assert all(m in strat_lib.names() for m in METHODS)
 KS = (3, 4, 5)
 
 # paper §IV-B: converged target thresholds

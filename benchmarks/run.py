@@ -5,6 +5,7 @@
 Sections:
   [kernels]    microbenchmark CSV (name,us_per_call,derived)
   [clustering] §III-B PS-selection quality & energy mechanism
+  [engine]     scan-compiled engine vs legacy host-loop wall-clock speedup
   [fig3]       accuracy vs rounds (4 methods x K in {3,4,5} x 2 datasets)
   [table1]     time/energy to target accuracy (Table I)
   [roofline]   three-term roofline per (arch x shape) from the dry-run
@@ -36,6 +37,10 @@ def main() -> None:
     section("clustering")
     from benchmarks import clustering_bench
     clustering_bench.main()
+
+    section("engine")
+    from benchmarks import engine_bench
+    engine_bench.main(rounds=30 if args.fast else 60)
 
     section("fig3-accuracy")
     from benchmarks import fig3_accuracy, table1_time_energy

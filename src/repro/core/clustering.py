@@ -35,7 +35,7 @@ def assign(x: jnp.ndarray, centroids: jnp.ndarray) -> jnp.ndarray:
     return jnp.argmin(pairwise_sq_dist(x, centroids), axis=1).astype(jnp.int32)
 
 
-def _update_centroids(x, assignment, centroids):
+def update_centroids(x, assignment, centroids):
     """Eq. 14; empty clusters keep their previous centroid."""
     K = centroids.shape[0]
     one_hot = jax.nn.one_hot(assignment, K, dtype=x.dtype)        # (N,K)
@@ -44,6 +44,10 @@ def _update_centroids(x, assignment, centroids):
     new = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1.0)[:, None],
                     centroids)
     return new
+
+
+# back-compat alias (pre-1.0 callers imported the private name)
+_update_centroids = update_centroids
 
 
 @functools.partial(jax.jit, static_argnames=("k", "iters"))
@@ -59,7 +63,7 @@ def kmeans(positions: jnp.ndarray, k: int, rng: jax.Array,
     def step(carry, _):
         c, done, it = carry
         a = assign(positions, c)
-        c_new = _update_centroids(positions, a, c)
+        c_new = update_centroids(positions, a, c)
         shift = jnp.sum(jnp.square(c_new - c))                    # Eq. 15
         newly_done = shift < tol
         c_out = jnp.where(done, c, c_new)

@@ -1,0 +1,399 @@
+"""Scan-compiled FL round engine: the whole multi-round simulation as ONE
+compiled XLA program.
+
+Architecture
+------------
+:class:`RoundState` is a pytree carrying everything a round mutates — the
+client parameter stack, cluster assignment, centroids, PS indices, the loop
+RNG key, cumulative simulated time/energy, and the re-cluster count.  One
+round is ``round_step(state, round_index) -> (state, RoundOutput)``, and the
+full run is ``jax.lax.scan(round_step, state0, jnp.arange(rounds))``:
+
+* the orbital propagator (`orbits/constellation.py`) is pure-jnp, so
+  satellite/ground-station positions are computed *inside* the scan from the
+  carried simulation clock;
+* the every-``m``-rounds global aggregation and the dropout-triggered
+  re-cluster (Alg. 1 lines 14-18, including ``kmeans`` and the §III-C MAML
+  hand-off) are ``jax.lax.cond`` branches, so no per-round host syncs exist
+  anywhere — a 150-round run does exactly one device→host transfer, for the
+  stacked :class:`RoundOutput` history at the end;
+* method behavior comes from the :mod:`repro.core.strategies` registry:
+  clustering init, weighting rule, re-cluster policy, inheritance rule and
+  cost model are composable `Strategy` fields, not string branches.
+
+One-time setup (synthetic data, model init, initial clustering + PS
+selection) runs eagerly on the host, exactly like the legacy loop: it is
+O(1) per experiment, and keeping it out of the compiled program makes the
+engine trajectory bit-compatible with ``run_fl_legacy`` at round 0 (XLA
+fuses multiply-adds inside large jitted programs, which can flip argmin
+tie-breaks in the symmetric t=0 constellation geometry).
+
+Entry points
+------------
+``run(cfg)`` mirrors the legacy ``run_fl`` history dict (the compatibility
+wrapper in `core/fedhc.py` routes ``run_fl`` here).  ``simulate(cfg, seed)``
+returns the raw per-round arrays on device.  ``run_many_seeds(cfg, seeds)``
+stacks per-seed setups and ``vmap``s the round scan, so a multi-seed sweep
+is a single compiled call (note: under ``vmap``, ``lax.cond`` lowers to
+``select``, so per-seed branches both execute; the win is batching across
+the sweep, not branch skipping).
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import aggregation as agg
+from repro.core import clustering as cl
+from repro.core import maml as maml_lib
+from repro.core import strategies as strat_lib
+from repro.core.fedhc import FLRunConfig, _local_train, _meta_update_clusters
+from repro.data.synthetic import client_batches, dirichlet_partition, make_split
+from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
+from repro.orbits import cost as cost_lib
+from repro.orbits.constellation import Constellation, ground_station_position
+from repro.orbits.links import LinkParams
+
+
+class RoundState(NamedTuple):
+    """Everything one FL round mutates, as a scan carry."""
+    params: Any                # (C, ...) client stack, or the server model
+    assignment: jnp.ndarray    # (C,) int32 cluster id per satellite
+    centroids: jnp.ndarray    # (K, 3) position-space centroids
+    ps_index: jnp.ndarray      # (K,) int32 satellite chosen as cluster PS
+    rng: jax.Array             # loop key; per-round keys fold in the index
+    t_sim: jnp.ndarray         # () f32 cumulative simulated time (s)
+    e_sim: jnp.ndarray         # () f32 cumulative energy (J)
+    reclusters: jnp.ndarray    # () int32 re-cluster events so far
+
+
+class RoundOutput(NamedTuple):
+    """Per-round scan output; stacked over rounds = the full history."""
+    acc: jnp.ndarray           # test accuracy (NaN on non-eval rounds)
+    loss: jnp.ndarray          # mean training loss this round
+    time_s: jnp.ndarray        # cumulative time after this round
+    energy_j: jnp.ndarray      # cumulative energy after this round
+    reclustered: jnp.ndarray   # int32 0/1: re-cluster fired this round
+    evaluated: jnp.ndarray     # bool: acc is valid this round
+
+
+class SimData(NamedTuple):
+    """Per-experiment arrays the rounds read but never mutate."""
+    images: jnp.ndarray        # (N, H, W, ch) training pool
+    labels: jnp.ndarray        # (N,)
+    test_x: jnp.ndarray
+    test_y: jnp.ndarray
+    client_idx: jnp.ndarray    # (C, samples_per_client) per-client indices
+    data_sizes: jnp.ndarray    # (C,) f32
+    freqs: jnp.ndarray         # (C,) heterogeneous CPU frequencies
+    r_kmeans: jax.Array        # key the re-cluster kmeans folds the round into
+
+
+def _ps_of(positions, centroids, assignment, k):
+    """PS selection: per cluster, the member nearest its centroid."""
+    d = cl.pairwise_sq_dist(positions, centroids)
+    same = jax.nn.one_hot(assignment, k, dtype=bool).T
+    return jnp.argmin(jnp.where(same, d.T, jnp.inf), axis=1).astype(jnp.int32)
+
+
+def _constellation_for(num_clients: int) -> Constellation:
+    planes = int(math.sqrt(num_clients))
+    while num_clients % planes:
+        planes -= 1
+    return Constellation(num_planes=planes,
+                         sats_per_plane=num_clients // planes)
+
+
+def setup(cfg: FLRunConfig, seed: Optional[int] = None
+          ) -> tuple[RoundState, SimData]:
+    """One-time experiment setup (host side, same RNG stream layout as the
+    legacy loop): synthetic data, model init, strategy-pluggable initial
+    clustering, PS selection."""
+    strategy = strat_lib.get(cfg.method)
+    ds = cfg.dataset
+    k = 1 if strategy.centralized else cfg.num_clusters
+    n_total = cfg.num_clients * cfg.samples_per_client
+
+    rng = jax.random.PRNGKey(cfg.seed if seed is None else seed)
+    r_data, r_part, r_model, r_freq, r_kmeans, r_loop = \
+        jax.random.split(rng, 6)
+
+    (images, labels), (test_x, test_y) = make_split(
+        r_data, ds, n_total, cfg.eval_size)
+    client_idx = dirichlet_partition(r_part, labels, cfg.num_clients,
+                                     cfg.dirichlet_alpha,
+                                     cfg.samples_per_client,
+                                     num_classes=ds.num_classes)
+    data_sizes = jnp.full((cfg.num_clients,), cfg.samples_per_client,
+                          jnp.float32)
+
+    w0 = init_lenet(r_model, ds.channels, ds.img, ds.num_classes)
+    freqs = cost_lib.sample_freqs(r_freq, cfg.num_clients,
+                                  cost_lib.ComputeParams())
+
+    pos0 = _constellation_for(cfg.num_clients).positions(0.0)
+    hists = jax.vmap(lambda idx: jnp.bincount(
+        labels[idx], length=ds.num_classes))(client_idx)
+    hists = (hists / cfg.samples_per_client).astype(jnp.float32)
+    init_fn = strat_lib.CLUSTER_INITS[strategy.cluster_init]
+    assignment0, centroids0 = init_fn(r_kmeans, pos0, hists, k)
+    ps_index0 = _ps_of(pos0, centroids0, assignment0, k)
+
+    params0 = (w0 if strategy.centralized
+               else agg.broadcast_global(w0, cfg.num_clients))
+    state0 = RoundState(params0, assignment0.astype(jnp.int32), centroids0,
+                        ps_index0, r_loop, jnp.float32(0.0),
+                        jnp.float32(0.0), jnp.int32(0))
+    data = SimData(images, labels, test_x, test_y, client_idx, data_sizes,
+                   freqs, r_kmeans)
+    return state0, data
+
+
+@functools.lru_cache(maxsize=32)
+def _scan_fn(cfg: FLRunConfig):
+    """Build (and cache) the jitted ``(state0, data) -> (state, outputs)``
+    round scan for a config.  ``FLRunConfig`` is frozen, hence hashable."""
+    strategy = strat_lib.get(cfg.method)
+    ds = cfg.dataset
+    k = 1 if strategy.centralized else cfg.num_clusters
+    n_total = cfg.num_clients * cfg.samples_per_client
+    constellation = _constellation_for(cfg.num_clients)
+    lp, cp = LinkParams(), cost_lib.ComputeParams()
+    sample_bits = ds.img ** 2 * ds.channels * 32.0
+
+    hier = functools.partial(agg.hierarchical_round, k=k,
+                             loss_weighted=strategy.loss_weighted)
+
+    def run_scan(state0: RoundState, data: SimData):
+        model_bits = sum(
+            x.size for x in jax.tree_util.tree_leaves(state0.params))
+        if not strategy.centralized:
+            model_bits //= cfg.num_clients
+        model_bits *= 32.0
+
+        def finish(state, rnd, params, assignment, centroids, ps_index,
+                   reclustered, loss_val, t_r, e_r, global_model_fn):
+            t_new = state.t_sim + t_r + cfg.round_minutes * 60.0
+            e_new = state.e_sim + e_r
+            evaluated = (((rnd + 1) % cfg.eval_every == 0)
+                         | (rnd == cfg.rounds - 1))
+            acc = jax.lax.cond(
+                evaluated,
+                lambda _: lenet_accuracy(global_model_fn(), data.test_x,
+                                         data.test_y),
+                lambda _: jnp.float32(jnp.nan), None)
+            new_state = RoundState(params, assignment, centroids, ps_index,
+                                   state.rng, t_new, e_new,
+                                   state.reclusters + reclustered)
+            out = RoundOutput(acc, loss_val, t_new, e_new, reclustered,
+                              evaluated)
+            return new_state, out
+
+        # ---- one federated round (fedhc / fedhc-nomaml / h-base / fedce) -
+        def fed_step(state, rnd):
+            r_rnd = jax.random.fold_in(state.rng, rnd)
+            positions = constellation.positions(state.t_sim)
+            gs = ground_station_position(t_s=state.t_sim)
+            do_global = (rnd + 1) % cfg.rounds_per_global == 0
+
+            imgs, labs = client_batches(data.images, data.labels,
+                                        data.client_idx, r_rnd,
+                                        cfg.batch_size)
+
+            # geometry drift: a satellite whose nearest centroid changed
+            # has "left" its cluster (Alg. 1) — drives the dropout rate.
+            nearest = cl.assign(positions, state.centroids)
+            in_region = nearest == state.assignment
+            participating = jnp.ones_like(in_region)
+
+            params, losses = _local_train(state.params, imgs, labs,
+                                          lr=cfg.lr, steps=cfg.local_steps)
+            params = jax.lax.cond(
+                do_global,
+                lambda p: hier(p, losses, data.data_sizes, state.assignment,
+                               participating=participating, do_global=True),
+                lambda p: hier(p, losses, data.data_sizes, state.assignment,
+                               participating=participating, do_global=False),
+                params)
+            loss_val = jnp.mean(losses)
+
+            ps_positions = positions[state.ps_index][state.assignment]
+            t_r, e_r = cost_lib.cluster_round_costs(
+                positions, ps_positions, state.assignment, participating,
+                data.data_sizes, data.freqs, model_bits=model_bits,
+                lp=lp, cp=cp)
+            t_g, e_g = cost_lib.ground_round_costs(
+                positions[state.ps_index], gs, model_bits=model_bits, lp=lp)
+            t_r = t_r + jnp.where(do_global, t_g, 0.0)
+            e_r = e_r + jnp.where(do_global, e_g, 0.0)
+
+            assignment, centroids, ps_index = (state.assignment,
+                                               state.centroids,
+                                               state.ps_index)
+            reclustered = jnp.int32(0)
+            if strategy.reclusters:
+                # ---- re-cluster check (Alg. 1 lines 14-18) ---------------
+                d_r = cl.dropout_rate(in_region, state.assignment, k)
+                fire = do_global & (jnp.max(d_r) > cfg.dropout_threshold)
+
+                def do_recluster(operand):
+                    params, assignment, centroids, ps_index = operand
+                    res = cl.kmeans(positions, k,
+                                    jax.random.fold_in(data.r_kmeans, rnd))
+                    new_assignment = res.assignment
+                    cluster_models = agg.cluster_aggregate(
+                        params,
+                        agg.loss_weights(losses, new_assignment, k),
+                        new_assignment, k)
+                    if strategy.maml:
+                        cluster_models = _meta_update_clusters(
+                            cluster_models, new_assignment, imgs, labs,
+                            k=k, alpha=cfg.maml_alpha, beta=cfg.maml_beta)
+                    inherited = agg.broadcast_clusters(cluster_models,
+                                                       new_assignment)
+                    if strategy.maml:
+                        # joining members take MAML inner steps on their own
+                        # data from the meta-updated cluster model (§III-C)
+                        inherited = jax.vmap(
+                            lambda m, i, l: maml_lib.inner_adapt(
+                                lenet_loss, m, (i, l), cfg.maml_alpha))(
+                            inherited, imgs, labs)
+                    changed = new_assignment != assignment
+                    params = jax.tree_util.tree_map(
+                        lambda inh, old: jnp.where(
+                            changed.reshape((-1,) + (1,) * (inh.ndim - 1)),
+                            inh, old), inherited, params)
+                    return (params, new_assignment, res.centroids,
+                            res.ps_index, jnp.int32(1))
+
+                def no_recluster(operand):
+                    return operand + (jnp.int32(0),)
+
+                (params, assignment, centroids, ps_index,
+                 reclustered) = jax.lax.cond(
+                    fire, do_recluster, no_recluster,
+                    (params, assignment, centroids, ps_index))
+
+            return finish(
+                state, rnd, params, assignment, centroids, ps_index,
+                reclustered, loss_val, t_r, e_r,
+                lambda: jax.tree_util.tree_map(
+                    lambda x: jnp.mean(x.astype(jnp.float32), 0), params))
+
+        # ---- one centralized round (c-fedavg) ----------------------------
+        def central_step(state, rnd):
+            r_rnd = jax.random.fold_in(state.rng, rnd)
+            positions = constellation.positions(state.t_sim)
+            model = state.params
+
+            def sgd(model, s):
+                b = jax.random.fold_in(r_rnd, s)
+                picks = jax.random.randint(b, (cfg.batch_size,), 0, n_total)
+                l, g = jax.value_and_grad(lenet_loss)(
+                    model, (data.images[picks], data.labels[picks]))
+                model = jax.tree_util.tree_map(
+                    lambda a, gg: a - cfg.lr * gg, model, g)
+                return model, l
+
+            if cfg.local_steps > 0:
+                model, ls = jax.lax.scan(sgd, model,
+                                         jnp.arange(cfg.local_steps))
+                loss_val = ls[-1]
+            else:
+                # no training this round: report the current model's loss
+                picks = jax.random.randint(jax.random.fold_in(r_rnd, 0),
+                                           (cfg.batch_size,), 0, n_total)
+                loss_val = lenet_loss(
+                    model, (data.images[picks], data.labels[picks]))
+
+            participating = jnp.ones((cfg.num_clients,), bool)
+            server_pos = positions[state.ps_index[0]]
+            t_r, e_r = cost_lib.cfedavg_round_costs(
+                positions, server_pos, participating, data.data_sizes,
+                data.freqs, sample_bits=sample_bits,
+                server_freq_hz=cp.max_freq_hz, lp=lp, cp=cp)
+
+            return finish(state, rnd, model, state.assignment,
+                          state.centroids, state.ps_index, jnp.int32(0),
+                          loss_val, t_r, e_r, lambda: model)
+
+        step = central_step if strategy.centralized else fed_step
+        return jax.lax.scan(step, state0, jnp.arange(cfg.rounds))
+
+    return jax.jit(run_scan)
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+
+def simulate(cfg: FLRunConfig, seed: Optional[int] = None):
+    """One compiled run -> (final RoundState, stacked RoundOutput) on
+    device.  No host syncs happen inside the round loop."""
+    state0, data = setup(cfg, seed)
+    return _scan_fn(cfg)(state0, data)
+
+
+def run(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
+    """Drop-in replacement for the legacy ``run_fl`` loop: same history
+    dict (entries at every ``eval_every``-th round plus the last), produced
+    by a single scan-compiled call and ONE device->host transfer."""
+    final_state, outs = simulate(cfg)
+    outs = jax.device_get(outs)                     # the one transfer
+
+    idx = np.nonzero(np.asarray(outs.evaluated))[0]
+    history: Dict[str, list] = {
+        "round": [int(i) + 1 for i in idx],
+        "acc": [float(outs.acc[i]) for i in idx],
+        "loss": [float(outs.loss[i]) for i in idx],
+        "time_s": [float(outs.time_s[i]) for i in idx],
+        "energy_j": [float(outs.energy_j[i]) for i in idx],
+        "reclusters": int(np.sum(outs.reclustered)),
+    }
+    if verbose:
+        k = 1 if strat_lib.get(cfg.method).centralized else cfg.num_clusters
+        for r, a, l, t, e in zip(history["round"], history["acc"],
+                                 history["loss"], history["time_s"],
+                                 history["energy_j"]):
+            print(f"[{cfg.method} K={k}] round {r:4d} "
+                  f"acc={a:.3f} loss={l:.3f} T={t:.0f}s E={e:.1f}J")
+    return history
+
+
+@functools.lru_cache(maxsize=32)
+def _vmapped_scan_fn(cfg: FLRunConfig):
+    strategy = strat_lib.get(cfg.method)   # validate before tracing
+    del strategy
+    return jax.jit(jax.vmap(lambda s0, d: _scan_fn(cfg)(s0, d)))
+
+
+def run_many_seeds(cfg: FLRunConfig,
+                   seeds: Sequence[int]) -> Dict[str, np.ndarray]:
+    """Multi-seed sweep: per-seed setups are stacked and the full round
+    scan runs as ONE compiled ``vmap`` call over the seed axis.
+
+    Returns per-round arrays of shape ``(num_seeds, rounds)`` — mask by
+    ``evaluated`` to recover the eval-cadence history — plus per-seed
+    re-cluster totals."""
+    setups = [setup(cfg, int(s)) for s in seeds]
+    state0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                    *[s for s, _ in setups])
+    data = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
+                                  *[d for _, d in setups])
+    final_state, outs = _vmapped_scan_fn(cfg)(state0, data)
+    outs = jax.device_get(outs)
+    return {
+        "seeds": np.asarray(list(seeds)),
+        "acc": np.asarray(outs.acc),
+        "loss": np.asarray(outs.loss),
+        "time_s": np.asarray(outs.time_s),
+        "energy_j": np.asarray(outs.energy_j),
+        "evaluated": np.asarray(outs.evaluated),
+        "reclusters": np.asarray(outs.reclustered).sum(axis=1),
+    }

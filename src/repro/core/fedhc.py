@@ -17,6 +17,12 @@ Methods:
   fedce        : clusters on label-distribution (Dirichlet mixture) space,
                  data-size weights, no MAML.
   c-fedavg     : centralized — raw data to one satellite server (K=1).
+
+``run_fl`` is now a thin compatibility wrapper over the scan-compiled
+round engine (`core/engine.py`), which executes the whole multi-round
+simulation as one XLA program driven by the `core/strategies.py` registry.
+The original host-side Python loop is kept as ``run_fl_legacy`` — it is the
+semantic oracle the engine parity tests check against.
 """
 from __future__ import annotations
 
@@ -32,6 +38,7 @@ import numpy as np
 from repro.core import aggregation as agg
 from repro.core import clustering as cl
 from repro.core import maml as maml_lib
+from repro.core import strategies as strat_lib
 from repro.data.synthetic import (DatasetSpec, MNIST_LIKE, client_batches,
                                   dirichlet_partition, make_split)
 from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
@@ -39,7 +46,7 @@ from repro.orbits import cost as cost_lib
 from repro.orbits.constellation import Constellation, ground_station_position
 from repro.orbits.links import LinkParams
 
-METHODS = ("fedhc", "fedhc-nomaml", "h-base", "fedce", "c-fedavg")
+METHODS = strat_lib.names()   # the five paper methods, registry-ordered
 
 
 @dataclass(frozen=True)
@@ -109,6 +116,20 @@ def _meta_update_clusters(cluster_models, assignment, images, labels, *,
 
 
 def run_fl(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
+    """Run a full FL experiment; history dict with entries at every
+    ``eval_every``-th round (plus the last) and the re-cluster count.
+
+    Compatibility wrapper: execution happens in the scan-compiled engine
+    (`repro.core.engine`), one XLA program for the whole run."""
+    from repro.core import engine   # late import: engine imports this module
+    return engine.run(cfg, verbose=verbose)
+
+
+def run_fl_legacy(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
+    """The original host-side round loop (one device sync per round).
+
+    Kept as the reference implementation: `tests/test_engine_parity.py`
+    asserts the scan engine reproduces this trajectory for all methods."""
     assert cfg.method in METHODS, cfg.method
     rng = jax.random.PRNGKey(cfg.seed)
     r_data, r_part, r_model, r_freq, r_kmeans, r_loop = jax.random.split(rng, 6)
@@ -119,7 +140,8 @@ def run_fl(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
         r_data, cfg.dataset, n_total, cfg.eval_size)
     client_idx = dirichlet_partition(r_part, labels, cfg.num_clients,
                                      cfg.dirichlet_alpha,
-                                     cfg.samples_per_client)
+                                     cfg.samples_per_client,
+                                     num_classes=cfg.dataset.num_classes)
     data_sizes = jnp.full((cfg.num_clients,), cfg.samples_per_client,
                           jnp.float32)
 
@@ -153,12 +175,12 @@ def run_fl(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
         hists = hists / cfg.samples_per_client
         res = cl.kmeans(hists.astype(jnp.float32), k, r_kmeans)
         assignment = res.assignment
-        centroids = cl._update_centroids(pos0, assignment,
-                                         pos0[res.ps_index])
+        centroids = cl.update_centroids(pos0, assignment,
+                                        pos0[res.ps_index])
     elif cfg.method == "h-base":
         assignment = jax.random.randint(r_kmeans, (cfg.num_clients,), 0, k
                                         ).astype(jnp.int32)
-        centroids = cl._update_centroids(pos0, assignment, pos0[:k])
+        centroids = cl.update_centroids(pos0, assignment, pos0[:k])
     else:  # c-fedavg
         assignment = jnp.zeros((cfg.num_clients,), jnp.int32)
         centroids = pos0.mean(0, keepdims=True)
@@ -215,6 +237,11 @@ def run_fl(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
                     centralized, (images[picks], labels[picks]))
                 centralized = jax.tree_util.tree_map(
                     lambda a, gg: a - cfg.lr * gg, centralized, g)
+            if cfg.local_steps == 0:
+                # no training this round: report the current model's loss
+                picks = jax.random.randint(jax.random.fold_in(r_rnd, 0),
+                                           (cfg.batch_size,), 0, n_total)
+                l = lenet_loss(centralized, (images[picks], labels[picks]))
             participating = jnp.ones((cfg.num_clients,), bool)
             server_pos = positions[int(ps_index[0])]
             t_r, e_r = cfedavg_costs(positions, server_pos, participating,

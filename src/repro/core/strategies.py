@@ -1,0 +1,189 @@
+"""Pluggable FL strategy registry — the five paper methods as declarative
+configurations instead of string `if/else` branches in the driver.
+
+A :class:`Strategy` decomposes a federated-learning method into four
+orthogonal axes, each a dataclass field the round engine consumes:
+
+* ``cluster_init``   — how the initial clustering is produced (a key into
+  :data:`CLUSTER_INITS`, itself an open registry of jit-able callables);
+* ``weighting``      — the stage-1 aggregation weighting rule
+  (``"loss"`` = Eq. 12 inverse-loss weights, ``"data"`` = Eq. 5 FedAvg);
+* ``recluster``      — the re-cluster policy (``"dropout"`` = Alg. 1
+  lines 14-18 dropout-rate trigger, ``"never"`` = static clusters);
+* ``inherit``        — how members joining a cluster obtain a model on
+  re-cluster (``"maml"`` = §III-C meta-update + inner adaptation,
+  ``"copy"`` = cold copy of the cluster model);
+* ``cost_model``     — ``"hierarchical"`` (Eq. 7-10 two-stage costs) or
+  ``"centralized"`` (raw-data upload to one satellite server, §IV-A).
+
+New methods — e.g. the connectivity/scheduling variants explored by
+FedSpace (arXiv 2202.01267) or ISL-based on-board FL (arXiv 2307.08346) —
+register a :class:`Strategy` (and, if needed, a new ``CLUSTER_INITS``
+entry) instead of growing the round driver.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import clustering as cl
+
+# --------------------------------------------------------------------------
+# Clustering initializers.
+#
+# Signature: fn(rng, positions, label_hists, k) -> (assignment, centroids)
+#   positions   (N, 3) ECI km at t=0
+#   label_hists (N, num_classes) per-client class mixture (row-normalized)
+# All entries must be pure-jnp / jit-able so the engine can trace them.
+# --------------------------------------------------------------------------
+
+ClusterInitFn = Callable[[jax.Array, jnp.ndarray, jnp.ndarray, int],
+                         Tuple[jnp.ndarray, jnp.ndarray]]
+
+CLUSTER_INITS: Dict[str, ClusterInitFn] = {}
+
+
+def cluster_init(name: str) -> Callable[[ClusterInitFn], ClusterInitFn]:
+    """Decorator: register a clustering initializer under ``name``."""
+    def deco(fn: ClusterInitFn) -> ClusterInitFn:
+        CLUSTER_INITS[name] = fn
+        return fn
+    return deco
+
+
+@cluster_init("position")
+def _init_position(rng, positions, label_hists, k):
+    """Paper §III-B: k-means over satellite position vectors."""
+    res = cl.kmeans(positions, k, rng)
+    return res.assignment, res.centroids
+
+
+@cluster_init("label_hist")
+def _init_label_hist(rng, positions, label_hists, k):
+    """FedCE-style: cluster in label-distribution space, then place the
+    position-space centroids at the mean member position (seeded from the
+    label-space PS picks) so geometry drift is still measurable."""
+    res = cl.kmeans(label_hists, k, rng)
+    centroids = cl.update_centroids(positions, res.assignment,
+                                    positions[res.ps_index])
+    return res.assignment, centroids
+
+
+@cluster_init("random")
+def _init_random(rng, positions, label_hists, k):
+    """H-BASE: random static clusters."""
+    n = positions.shape[0]
+    assignment = jax.random.randint(rng, (n,), 0, k).astype(jnp.int32)
+    centroids = cl.update_centroids(positions, assignment, positions[:k])
+    return assignment, centroids
+
+
+@cluster_init("single")
+def _init_single(rng, positions, label_hists, k):
+    """Centralized baseline: everyone in one cluster (K must be 1)."""
+    n = positions.shape[0]
+    assignment = jnp.zeros((n,), jnp.int32)
+    centroids = positions.mean(0, keepdims=True)
+    return assignment, centroids
+
+
+# --------------------------------------------------------------------------
+# Strategies.
+# --------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class Strategy:
+    """A federated-learning method as composable engine policies."""
+    name: str
+    cluster_init: str = "position"     # key into CLUSTER_INITS
+    weighting: str = "loss"            # "loss" (Eq. 12) | "data" (Eq. 5)
+    recluster: str = "dropout"         # "dropout" (Alg. 1) | "never"
+    inherit: str = "maml"              # "maml" (§III-C) | "copy"
+    cost_model: str = "hierarchical"   # "hierarchical" | "centralized"
+    description: str = ""
+
+    def __post_init__(self):
+        if self.cluster_init not in CLUSTER_INITS:
+            raise ValueError(f"unknown cluster_init {self.cluster_init!r}; "
+                             f"known: {sorted(CLUSTER_INITS)}")
+        for fld, val, ok in (("weighting", self.weighting, ("loss", "data")),
+                             ("recluster", self.recluster,
+                              ("dropout", "never")),
+                             ("inherit", self.inherit, ("maml", "copy")),
+                             ("cost_model", self.cost_model,
+                              ("hierarchical", "centralized"))):
+            if val not in ok:
+                raise ValueError(f"{fld}={val!r} not in {ok}")
+
+    # convenience predicates the engine branches on (all static / Python)
+    @property
+    def loss_weighted(self) -> bool:
+        return self.weighting == "loss"
+
+    @property
+    def reclusters(self) -> bool:
+        return self.recluster == "dropout"
+
+    @property
+    def maml(self) -> bool:
+        return self.inherit == "maml"
+
+    @property
+    def centralized(self) -> bool:
+        return self.cost_model == "centralized"
+
+
+_REGISTRY: Dict[str, Strategy] = {}
+
+
+def register(strategy: Strategy) -> Strategy:
+    """Register (or replace) a strategy under ``strategy.name``."""
+    _REGISTRY[strategy.name] = strategy
+    return strategy
+
+
+def get(name: str) -> Strategy:
+    try:
+        return _REGISTRY[name]
+    except KeyError:
+        raise KeyError(f"unknown FL strategy {name!r}; "
+                       f"registered: {names()}") from None
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+# ---- the five paper methods (§IV-A), declaratively -----------------------
+
+FEDHC = register(Strategy(
+    "fedhc", cluster_init="position", weighting="loss",
+    recluster="dropout", inherit="maml", cost_model="hierarchical",
+    description="position k-means + PS selection, loss-weighted stage-1, "
+                "stage-2 every m rounds, MAML on re-cluster"))
+
+FEDHC_NOMAML = register(Strategy(
+    "fedhc-nomaml", cluster_init="position", weighting="loss",
+    recluster="dropout", inherit="copy", cost_model="hierarchical",
+    description="ablation: re-clusters but new members copy the cluster "
+                "model cold"))
+
+H_BASE = register(Strategy(
+    "h-base", cluster_init="random", weighting="data",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    description="random static clusters, data-size weights, no re-cluster"))
+
+FEDCE = register(Strategy(
+    "fedce", cluster_init="label_hist", weighting="data",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    description="clusters on label-distribution space, data-size weights, "
+                "no MAML"))
+
+C_FEDAVG = register(Strategy(
+    "c-fedavg", cluster_init="single", weighting="data",
+    recluster="never", inherit="copy", cost_model="centralized",
+    description="centralized: raw data to one satellite server (K=1)"))

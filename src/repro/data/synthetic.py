@@ -65,14 +65,18 @@ def make_split(rng, spec: DatasetSpec, n_train: int, n_test: int):
 
 
 def dirichlet_partition(rng, labels: jnp.ndarray, num_clients: int,
-                        alpha: float = 0.5, samples_per_client: int = 128
-                        ) -> jnp.ndarray:
+                        alpha: float = 0.5, samples_per_client: int = 128,
+                        num_classes: int | None = None) -> jnp.ndarray:
     """Non-IID split: per-client class mixture ~ Dirichlet(alpha).
 
     Returns client_indices (num_clients, samples_per_client) int32 indices
     into the dataset (fixed-size per client; sampled with replacement from
-    the client's class mixture so shapes stay static)."""
-    num_classes = int(jnp.max(labels)) + 1
+    the client's class mixture so shapes stay static).
+
+    Pass ``num_classes`` explicitly to keep the function jit-able (the
+    default infers it from ``labels``, which forces a host sync)."""
+    if num_classes is None:
+        num_classes = int(jnp.max(labels)) + 1
     r_mix, r_pick = jax.random.split(rng)
     mix = jax.random.dirichlet(r_mix, jnp.full((num_classes,), alpha),
                                (num_clients,))                       # (C,cls)

@@ -3,7 +3,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro.core import clustering as cl
 
@@ -44,7 +44,7 @@ def test_centroid_update_empty_cluster_kept():
     x = jnp.ones((4, 2))
     assignment = jnp.zeros((4,), jnp.int32)     # cluster 1 empty
     old = jnp.asarray([[0.0, 0.0], [9.0, 9.0]])
-    new = cl._update_centroids(x, assignment, old)
+    new = cl.update_centroids(x, assignment, old)
     np.testing.assert_allclose(np.asarray(new[0]), [1.0, 1.0])
     np.testing.assert_allclose(np.asarray(new[1]), [9.0, 9.0])
 

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest import given, settings, st
 
 from repro import checkpoint as _  # noqa: F401
 from repro.checkpoint.checkpoint import restore, save
