@@ -17,6 +17,9 @@ NUM_CLIENTS = 32
 METHODS = ("c-fedavg", "h-base", "fedce", "fedhc")
 assert all(m in strat_lib.names() for m in METHODS)
 KS = (3, 4, 5)
+# fig3 curves are averaged over these seeds in ONE compiled
+# `engine.run_many_seeds` vmap call per grid cell
+SEEDS = (17, 18, 19)
 
 # paper §IV-B: converged target thresholds
 TARGET = {"mnist-like": 0.80, "cifar-like": 0.40}

@@ -3,14 +3,16 @@
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Sections:
-  [kernels]    microbenchmark CSV (name,us_per_call,derived)
-  [clustering] §III-B PS-selection quality & energy mechanism
-  [engine]     scan-compiled engine vs legacy host-loop wall-clock speedup
-  [fig3]       accuracy vs rounds (4 methods x K in {3,4,5} x 2 datasets)
-  [table1]     time/energy to target accuracy (Table I)
-  [roofline]   three-term roofline per (arch x shape) from the dry-run
+  [kernels]      microbenchmark CSV (name,us_per_call,derived)
+  [clustering]   §III-B PS-selection quality & energy mechanism
+  [engine]       scan-compiled engine vs legacy host-loop wall-clock speedup
+  [connectivity] contact-plan build cost + fedspace / isl-onboard vs fedhc
+  [fig3]         seed-averaged accuracy vs rounds (methods x K x datasets)
+  [table1]       time/energy to target accuracy (Table I)
+  [roofline]     three-term roofline per (arch x shape) from the dry-run
 
---fast runs a reduced fig3 grid (one K, mnist-like only) for CI-style runs.
+--fast runs a reduced fig3 grid (one K, mnist-like only) and the tiny
+connectivity configuration for CI-style runs.
 """
 from __future__ import annotations
 
@@ -41,6 +43,10 @@ def main() -> None:
     section("engine")
     from benchmarks import engine_bench
     engine_bench.main(rounds=30 if args.fast else 60)
+
+    section("connectivity")
+    from benchmarks import connectivity_bench
+    connectivity_bench.main(tiny=args.fast)
 
     section("fig3-accuracy")
     from benchmarks import fig3_accuracy, table1_time_energy

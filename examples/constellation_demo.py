@@ -1,13 +1,18 @@
 """Orbital mechanics + clustering demo: watch the constellation drift, the
-dropout rate build up (Alg. 1 line 15), and re-clustering restore short
-intra-cluster links.
+dropout rate build up (Alg. 1 line 15), re-clustering restore short
+intra-cluster links — and the time-varying connectivity substrate: the
+Earth-occluded ISL graph, multi-hop routes to each cluster PS, and the
+ground-station contact windows that gate fedspace-style global rounds.
 
     PYTHONPATH=src python examples/constellation_demo.py
 """
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import clustering as cl
+from repro.orbits import contact as contact_lib
+from repro.orbits import topology
 from repro.orbits.constellation import Constellation, ground_station_position, visible
 from repro.orbits.links import LinkParams, rate_bps
 
@@ -20,6 +25,9 @@ def main():
     pos0 = c.positions(0.0)
     res = cl.kmeans(pos0, k, rng)
     assignment, centroids, ps = res.assignment, res.centroids, res.ps_index
+    # the drift loop below re-clusters; keep the t=0 state for the ISL
+    # routing stats (which are computed on the t=0 geometry)
+    assignment0, ps0 = assignment, ps
     print(f"constellation: {c.num_sats} sats @ {c.altitude_km:.0f} km, "
           f"period {c.period_s/60:.1f} min; K={k} clusters "
           f"(k-means converged in {int(res.iterations)} iters)")
@@ -43,6 +51,37 @@ def main():
             dist2 = jnp.linalg.norm(pos - pos[ps][assignment], axis=-1)
             print(f"          -> RE-CLUSTERED: mean link "
                   f"{float(dist_ps.mean()):7.1f} -> {float(dist2.mean()):7.1f} km")
+
+    # ---- time-varying connectivity: ISL graph + contact plan -------------
+    print("\n--- ISL topology & contact plan ---")
+    adj = topology.isl_adjacency(pos0, max_range_km=8000.0)
+    hops = np.asarray(topology.hop_counts(adj, max_hops=8))
+    tpb = topology.route_time_per_bit(pos0, lp, max_range_km=8000.0,
+                                      max_hops=8)
+    deg = np.asarray(adj).sum(1)
+    print(f"t=0: ISL degree min/mean/max = {deg.min()}/{deg.mean():.1f}/"
+          f"{deg.max()}, reachable pairs "
+          f"{np.isfinite(hops).mean() * 100:.0f}%, max route "
+          f"{int(hops[np.isfinite(hops)].max())} hops")
+    tpb_ps = np.asarray(tpb)[np.arange(c.num_sats),
+                             np.asarray(ps0)[np.asarray(assignment0)]]
+    model_bits = 2e6
+    routed = np.where(np.isfinite(tpb_ps), tpb_ps * model_bits, np.nan)
+    print(f"routed upload of a {model_bits / 1e6:.0f} Mb model to the PS: "
+          f"mean {np.nanmean(routed):.1f}s, worst {np.nanmax(routed):.1f}s "
+          f"({int(np.isfinite(tpb_ps).sum())}/{c.num_sats} members have a "
+          f"route)")
+
+    plan = contact_lib.build_contact_plan(c, lp, dt_s=60.0)
+    vis_frac = float(np.asarray(plan.gs_visible).any(axis=1).mean())
+    print(f"contact plan: {plan.times.shape[0]} samples over one period; "
+          f"ground station reachable {vis_frac * 100:.0f}% of the time")
+    best_sat = int(np.asarray(plan.gs_visible).sum(0).argmax())
+    wins = contact_lib.contact_windows(plan, best_sat)
+    pretty = ", ".join(f"{s / 60:.0f}-{e / 60:.0f}min" for s, e in wins)
+    print(f"sat {best_sat} contact windows: {pretty}")
+    print("fedspace defers any global round that lands outside these "
+          "windows (engine carries a pending-aggregation flag)")
 
 
 if __name__ == "__main__":

@@ -18,8 +18,18 @@ full run is ``jax.lax.scan(round_step, state0, jnp.arange(rounds))``:
   anywhere — a 150-round run does exactly one device→host transfer, for the
   stacked :class:`RoundOutput` history at the end;
 * method behavior comes from the :mod:`repro.core.strategies` registry:
-  clustering init, weighting rule, re-cluster policy, inheritance rule and
-  cost model are composable `Strategy` fields, not string branches.
+  clustering init, weighting rule, re-cluster policy, inheritance rule,
+  cost model and connectivity are composable `Strategy` fields, not string
+  branches;
+* time-varying connectivity (``Strategy.connectivity != "always"``) rides
+  on a precomputed contact plan (`orbits/contact.py`): ``setup`` samples
+  ground-station visibility and all-pairs bounded-hop ISL route costs
+  over one orbital period as device arrays, and the scan *gathers* from
+  them by the carried simulation clock — participation is gated by ISL
+  reachability to the cluster PS, uploads cost hop-by-hop route time, and
+  a due stage-2 aggregation that finds no contact window sets the carried
+  ``pending_global`` flag and retries every subsequent round until a
+  window opens (FedSpace-style deferral), all without host syncs.
 
 One-time setup (synthetic data, model init, initial clustering + PS
 selection) runs eagerly on the host, exactly like the legacy loop: it is
@@ -55,6 +65,7 @@ from repro.core import strategies as strat_lib
 from repro.core.fedhc import FLRunConfig, _local_train, _meta_update_clusters
 from repro.data.synthetic import client_batches, dirichlet_partition, make_split
 from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
+from repro.orbits import contact as contact_lib
 from repro.orbits import cost as cost_lib
 from repro.orbits.constellation import Constellation, ground_station_position
 from repro.orbits.links import LinkParams
@@ -70,6 +81,9 @@ class RoundState(NamedTuple):
     t_sim: jnp.ndarray         # () f32 cumulative simulated time (s)
     e_sim: jnp.ndarray         # () f32 cumulative energy (J)
     reclusters: jnp.ndarray    # () int32 re-cluster events so far
+    pending_global: jnp.ndarray  # () bool: a due stage-2 aggregation is
+    #                              waiting for a contact window (always
+    #                              False for connectivity="always")
 
 
 class RoundOutput(NamedTuple):
@@ -80,6 +94,7 @@ class RoundOutput(NamedTuple):
     energy_j: jnp.ndarray      # cumulative energy after this round
     reclustered: jnp.ndarray   # int32 0/1: re-cluster fired this round
     evaluated: jnp.ndarray     # bool: acc is valid this round
+    did_global: jnp.ndarray    # int32 0/1: stage-2 aggregation fired
 
 
 class SimData(NamedTuple):
@@ -92,6 +107,8 @@ class SimData(NamedTuple):
     data_sizes: jnp.ndarray    # (C,) f32
     freqs: jnp.ndarray         # (C,) heterogeneous CPU frequencies
     r_kmeans: jax.Array        # key the re-cluster kmeans folds the round into
+    plan: Optional[contact_lib.ContactPlan]  # contact plan (None when the
+    #                                          strategy is always-up)
 
 
 def _ps_of(positions, centroids, assignment, k):
@@ -109,11 +126,28 @@ def _constellation_for(num_clients: int) -> Constellation:
                          sats_per_plane=num_clients // planes)
 
 
-def setup(cfg: FLRunConfig, seed: Optional[int] = None
+def _plan_for(cfg: FLRunConfig,
+              strategy: strat_lib.Strategy
+              ) -> Optional[contact_lib.ContactPlan]:
+    """Build the (seed-independent) contact plan a config needs — None
+    for always-up strategies."""
+    if not strategy.visibility_gated:
+        return None
+    return contact_lib.build_contact_plan(
+        _constellation_for(cfg.num_clients), LinkParams(),
+        dt_s=cfg.contact_dt_s,
+        min_elevation_deg=cfg.gs_min_elevation_deg,
+        max_range_km=cfg.isl_max_range_km, max_hops=cfg.isl_max_hops)
+
+
+def setup(cfg: FLRunConfig, seed: Optional[int] = None,
+          contact_plan: Optional[contact_lib.ContactPlan] = None
           ) -> tuple[RoundState, SimData]:
     """One-time experiment setup (host side, same RNG stream layout as the
     legacy loop): synthetic data, model init, strategy-pluggable initial
-    clustering, PS selection."""
+    clustering, PS selection.  ``contact_plan`` lets multi-seed sweeps
+    share one prebuilt plan (it is seed-independent) instead of paying
+    the O(T * N^3) build per seed."""
     strategy = strat_lib.get(cfg.method)
     ds = cfg.dataset
     k = 1 if strategy.centralized else cfg.num_clusters
@@ -148,9 +182,12 @@ def setup(cfg: FLRunConfig, seed: Optional[int] = None
                else agg.broadcast_global(w0, cfg.num_clients))
     state0 = RoundState(params0, assignment0.astype(jnp.int32), centroids0,
                         ps_index0, r_loop, jnp.float32(0.0),
-                        jnp.float32(0.0), jnp.int32(0))
+                        jnp.float32(0.0), jnp.int32(0), jnp.bool_(False))
+    # one-time eager build; the compiled rounds only gather from it
+    plan = (contact_plan if contact_plan is not None
+            else _plan_for(cfg, strategy))
     data = SimData(images, labels, test_x, test_y, client_idx, data_sizes,
-                   freqs, r_kmeans)
+                   freqs, r_kmeans, plan)
     return state0, data
 
 
@@ -177,7 +214,8 @@ def _scan_fn(cfg: FLRunConfig):
         model_bits *= 32.0
 
         def finish(state, rnd, params, assignment, centroids, ps_index,
-                   reclustered, loss_val, t_r, e_r, global_model_fn):
+                   reclustered, loss_val, t_r, e_r, pending_next,
+                   did_global, global_model_fn):
             t_new = state.t_sim + t_r + cfg.round_minutes * 60.0
             e_new = state.e_sim + e_r
             evaluated = (((rnd + 1) % cfg.eval_every == 0)
@@ -189,17 +227,18 @@ def _scan_fn(cfg: FLRunConfig):
                 lambda _: jnp.float32(jnp.nan), None)
             new_state = RoundState(params, assignment, centroids, ps_index,
                                    state.rng, t_new, e_new,
-                                   state.reclusters + reclustered)
+                                   state.reclusters + reclustered,
+                                   pending_next)
             out = RoundOutput(acc, loss_val, t_new, e_new, reclustered,
-                              evaluated)
+                              evaluated, did_global)
             return new_state, out
 
-        # ---- one federated round (fedhc / fedhc-nomaml / h-base / fedce) -
+        # ---- one federated round (fedhc / fedhc-nomaml / h-base / fedce
+        # ----  / fedspace / isl-onboard) ----------------------------------
         def fed_step(state, rnd):
             r_rnd = jax.random.fold_in(state.rng, rnd)
             positions = constellation.positions(state.t_sim)
-            gs = ground_station_position(t_s=state.t_sim)
-            do_global = (rnd + 1) % cfg.rounds_per_global == 0
+            cadence_due = (rnd + 1) % cfg.rounds_per_global == 0
 
             imgs, labs = client_batches(data.images, data.labels,
                                         data.client_idx, r_rnd,
@@ -209,7 +248,40 @@ def _scan_fn(cfg: FLRunConfig):
             # has "left" its cluster (Alg. 1) — drives the dropout rate.
             nearest = cl.assign(positions, state.centroids)
             in_region = nearest == state.assignment
-            participating = jnp.ones_like(in_region)
+
+            if strategy.visibility_gated:
+                # contact-plan gathers: who can route to whom *right now*
+                gs_vis, gs_dist, tpb = contact_lib.lookup(data.plan,
+                                                          state.t_sim)
+                ps_of_member = state.ps_index[state.assignment]       # (C,)
+                tpb_to_ps = tpb[jnp.arange(cfg.num_clients), ps_of_member]
+                # a member participates iff a bounded-hop ISL route to its
+                # PS exists (the PS itself always does: tpb diagonal is 0)
+                participating = jnp.isfinite(tpb_to_ps)
+                ps_tpb = tpb[state.ps_index][:, state.ps_index]       # (K,K)
+                if strategy.isl_global:
+                    # on-board consensus: needs every PS pair connected
+                    window = jnp.all(jnp.isfinite(ps_tpb))
+                    t_g, e_g = cost_lib.isl_consensus_costs(
+                        ps_tpb, model_bits=model_bits, lp=lp)
+                else:
+                    # relay gateway: the GS-visible satellite minimizing
+                    # the worst PS route (inf when none is visible)
+                    worst = jnp.max(tpb[state.ps_index, :], axis=0)   # (C,)
+                    score = jnp.where(gs_vis, worst, jnp.inf)
+                    gateway = jnp.argmin(score).astype(jnp.int32)
+                    window = jnp.isfinite(score[gateway])
+                    t_g, e_g = cost_lib.routed_ground_round_costs(
+                        tpb[state.ps_index, gateway], gs_dist[gateway],
+                        model_bits=model_bits, lp=lp)
+                due = cadence_due | state.pending_global
+                do_global = due & window
+                pending_next = due & ~window
+            else:
+                gs = ground_station_position(t_s=state.t_sim)
+                participating = jnp.ones_like(in_region)
+                do_global = cadence_due
+                pending_next = state.pending_global    # stays False
 
             params, losses = _local_train(state.params, imgs, labs,
                                           lr=cfg.lr, steps=cfg.local_steps)
@@ -222,13 +294,19 @@ def _scan_fn(cfg: FLRunConfig):
                 params)
             loss_val = jnp.mean(losses)
 
-            ps_positions = positions[state.ps_index][state.assignment]
-            t_r, e_r = cost_lib.cluster_round_costs(
-                positions, ps_positions, state.assignment, participating,
-                data.data_sizes, data.freqs, model_bits=model_bits,
-                lp=lp, cp=cp)
-            t_g, e_g = cost_lib.ground_round_costs(
-                positions[state.ps_index], gs, model_bits=model_bits, lp=lp)
+            if strategy.visibility_gated:
+                t_r, e_r = cost_lib.routed_cluster_round_costs(
+                    tpb_to_ps, participating, data.data_sizes, data.freqs,
+                    model_bits=model_bits, lp=lp, cp=cp)
+            else:
+                ps_positions = positions[state.ps_index][state.assignment]
+                t_r, e_r = cost_lib.cluster_round_costs(
+                    positions, ps_positions, state.assignment, participating,
+                    data.data_sizes, data.freqs, model_bits=model_bits,
+                    lp=lp, cp=cp)
+                t_g, e_g = cost_lib.ground_round_costs(
+                    positions[state.ps_index], gs, model_bits=model_bits,
+                    lp=lp)
             t_r = t_r + jnp.where(do_global, t_g, 0.0)
             e_r = e_r + jnp.where(do_global, e_g, 0.0)
 
@@ -281,7 +359,8 @@ def _scan_fn(cfg: FLRunConfig):
 
             return finish(
                 state, rnd, params, assignment, centroids, ps_index,
-                reclustered, loss_val, t_r, e_r,
+                reclustered, loss_val, t_r, e_r, pending_next,
+                do_global.astype(jnp.int32),
                 lambda: jax.tree_util.tree_map(
                     lambda x: jnp.mean(x.astype(jnp.float32), 0), params))
 
@@ -320,7 +399,8 @@ def _scan_fn(cfg: FLRunConfig):
 
             return finish(state, rnd, model, state.assignment,
                           state.centroids, state.ps_index, jnp.int32(0),
-                          loss_val, t_r, e_r, lambda: model)
+                          loss_val, t_r, e_r, state.pending_global,
+                          jnp.int32(0), lambda: model)
 
         step = central_step if strategy.centralized else fed_step
         return jax.lax.scan(step, state0, jnp.arange(cfg.rounds))
@@ -355,6 +435,7 @@ def run(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
         "time_s": [float(outs.time_s[i]) for i in idx],
         "energy_j": [float(outs.energy_j[i]) for i in idx],
         "reclusters": int(np.sum(outs.reclustered)),
+        "global_rounds": int(np.sum(outs.did_global)),
     }
     if verbose:
         k = 1 if strat_lib.get(cfg.method).centralized else cfg.num_clusters
@@ -370,23 +451,31 @@ def run(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
 def _vmapped_scan_fn(cfg: FLRunConfig):
     strategy = strat_lib.get(cfg.method)   # validate before tracing
     del strategy
-    return jax.jit(jax.vmap(lambda s0, d: _scan_fn(cfg)(s0, d)))
+    # the contact plan rides as a separate, non-batched argument: it is
+    # seed-independent, so it is shared (broadcast) instead of stacked
+    return jax.jit(jax.vmap(
+        lambda s0, d, plan: _scan_fn(cfg)(s0, d._replace(plan=plan)),
+        in_axes=(0, 0, None)))
 
 
 def run_many_seeds(cfg: FLRunConfig,
                    seeds: Sequence[int]) -> Dict[str, np.ndarray]:
     """Multi-seed sweep: per-seed setups are stacked and the full round
-    scan runs as ONE compiled ``vmap`` call over the seed axis.
+    scan runs as ONE compiled ``vmap`` call over the seed axis.  The
+    contact plan (when the strategy is visibility-gated) is built once
+    and broadcast across the seed axis, not rebuilt or copied per seed.
 
     Returns per-round arrays of shape ``(num_seeds, rounds)`` — mask by
     ``evaluated`` to recover the eval-cadence history — plus per-seed
     re-cluster totals."""
-    setups = [setup(cfg, int(s)) for s in seeds]
+    plan = _plan_for(cfg, strat_lib.get(cfg.method))
+    setups = [setup(cfg, int(s), contact_plan=plan) for s in seeds]
     state0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                     *[s for s, _ in setups])
-    data = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
-                                  *[d for _, d in setups])
-    final_state, outs = _vmapped_scan_fn(cfg)(state0, data)
+    data = jax.tree_util.tree_map(
+        lambda *xs: jnp.stack(xs),
+        *[d._replace(plan=None) for _, d in setups])
+    final_state, outs = _vmapped_scan_fn(cfg)(state0, data, plan)
     outs = jax.device_get(outs)
     return {
         "seeds": np.asarray(list(seeds)),
@@ -396,4 +485,5 @@ def run_many_seeds(cfg: FLRunConfig,
         "energy_j": np.asarray(outs.energy_j),
         "evaluated": np.asarray(outs.evaluated),
         "reclusters": np.asarray(outs.reclustered).sum(axis=1),
+        "global_rounds": np.asarray(outs.did_global).sum(axis=1),
     }

@@ -17,6 +17,10 @@ Methods:
   fedce        : clusters on label-distribution (Dirichlet mixture) space,
                  data-size weights, no MAML.
   c-fedavg     : centralized — raw data to one satellite server (K=1).
+  fedspace     : engine-only — FedSpace-style contact-window-scheduled
+                 global aggregation over the precomputed contact plan.
+  isl-onboard  : engine-only — no ground station; inter-cluster consensus
+                 over multi-hop ISL routes between cluster PSs.
 
 ``run_fl`` is now a thin compatibility wrapper over the scan-compiled
 round engine (`core/engine.py`), which executes the whole multi-round
@@ -46,7 +50,8 @@ from repro.orbits import cost as cost_lib
 from repro.orbits.constellation import Constellation, ground_station_position
 from repro.orbits.links import LinkParams
 
-METHODS = strat_lib.names()   # the five paper methods, registry-ordered
+METHODS = strat_lib.names()   # every registered method (paper five +
+#                               connectivity-gated variants), registry-ordered
 
 
 @dataclass(frozen=True)
@@ -69,6 +74,12 @@ class FLRunConfig:
     eval_size: int = 1024
     seed: int = 0
     round_minutes: float = 1.0            # orbital time advanced per round
+    # ---- time-varying connectivity (strategies with connectivity != ----
+    # ---- "always"; ignored by the five always-up paper methods) --------
+    contact_dt_s: float = 60.0            # contact-plan sample cadence
+    gs_min_elevation_deg: float = 10.0    # ground-station elevation mask
+    isl_max_range_km: float = 8000.0      # ISL terminal slant-range limit
+    isl_max_hops: int = 8                 # route relaxation hop bound
 
 
 # --------------------------------------------------------------------------
@@ -129,8 +140,10 @@ def run_fl_legacy(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
     """The original host-side round loop (one device sync per round).
 
     Kept as the reference implementation: `tests/test_engine_parity.py`
-    asserts the scan engine reproduces this trajectory for all methods."""
-    assert cfg.method in METHODS, cfg.method
+    asserts the scan engine reproduces this trajectory for the five
+    always-up paper methods (the connectivity-gated strategies are
+    engine-only — they have no legacy loop)."""
+    assert cfg.method in strat_lib.PAPER_METHODS, cfg.method
     rng = jax.random.PRNGKey(cfg.seed)
     r_data, r_part, r_model, r_freq, r_kmeans, r_loop = jax.random.split(rng, 6)
 

@@ -7,6 +7,11 @@ current orbital time.  Intra-cluster stage-1 is always allowed (ISLs).
 
 The production launcher uses this to set the ``do_global`` flag fed to the
 compiled train step; the FL simulator uses it to time ground aggregation.
+
+The scan engine's connectivity-gated strategies (``fedspace`` /
+``isl-onboard``) use the precomputed-contact-plan generalization of this
+gate instead — `orbits/contact.py` + the ``pending_global`` carry in
+`core/engine.py` — so the decision happens on device with no host syncs.
 """
 from __future__ import annotations
 

@@ -14,12 +14,25 @@ orthogonal axes, each a dataclass field the round engine consumes:
   re-cluster (``"maml"`` = §III-C meta-update + inner adaptation,
   ``"copy"`` = cold copy of the cluster model);
 * ``cost_model``     — ``"hierarchical"`` (Eq. 7-10 two-stage costs) or
-  ``"centralized"`` (raw-data upload to one satellite server, §IV-A).
+  ``"centralized"`` (raw-data upload to one satellite server, §IV-A);
+* ``connectivity``   — how link availability gates the round
+  (``"always"`` = every link is permanently up, today's idealized
+  behavior; ``"visibility"`` = participation and stage-2 are gated by the
+  precomputed contact plan (`orbits/contact.py`): a member participates
+  only if a bounded-hop ISL route to its cluster PS exists, uploads cost
+  the hop-by-hop route time, and global rounds *wait* — via the engine's
+  pending-aggregation flag — for a ground-station contact window, with
+  the visible satellite acting as relay gateway; ``"isl"`` = same
+  ISL-gated participation but NO ground station at all: stage 2 is an
+  all-to-all exchange of cluster models between PSs over ISL routes,
+  fired only when every PS pair is mutually reachable).
 
-New methods — e.g. the connectivity/scheduling variants explored by
-FedSpace (arXiv 2202.01267) or ISL-based on-board FL (arXiv 2307.08346) —
-register a :class:`Strategy` (and, if needed, a new ``CLUSTER_INITS``
-entry) instead of growing the round driver.
+New methods register a :class:`Strategy` (and, if needed, a new
+``CLUSTER_INITS`` entry) instead of growing the round driver; the two
+connectivity-aware entries below — ``fedspace`` (FedSpace,
+arXiv 2202.01267: schedule global aggregation around ground-station
+contact windows) and ``isl-onboard`` (Razmi et al., arXiv 2307.08346:
+fully on-board FL over inter-satellite links) — are exactly that.
 """
 from __future__ import annotations
 
@@ -104,6 +117,7 @@ class Strategy:
     recluster: str = "dropout"         # "dropout" (Alg. 1) | "never"
     inherit: str = "maml"              # "maml" (§III-C) | "copy"
     cost_model: str = "hierarchical"   # "hierarchical" | "centralized"
+    connectivity: str = "always"       # "always" | "visibility" | "isl"
     description: str = ""
 
     def __post_init__(self):
@@ -115,9 +129,15 @@ class Strategy:
                               ("dropout", "never")),
                              ("inherit", self.inherit, ("maml", "copy")),
                              ("cost_model", self.cost_model,
-                              ("hierarchical", "centralized"))):
+                              ("hierarchical", "centralized")),
+                             ("connectivity", self.connectivity,
+                              ("always", "visibility", "isl"))):
             if val not in ok:
                 raise ValueError(f"{fld}={val!r} not in {ok}")
+        if self.connectivity != "always" and self.cost_model == "centralized":
+            raise ValueError("connectivity gating requires the hierarchical "
+                             "cost model (the centralized baseline has no "
+                             "cluster PS to route to)")
 
     # convenience predicates the engine branches on (all static / Python)
     @property
@@ -135,6 +155,16 @@ class Strategy:
     @property
     def centralized(self) -> bool:
         return self.cost_model == "centralized"
+
+    @property
+    def visibility_gated(self) -> bool:
+        """Participation/stage-2 follow the contact plan (not always-up)."""
+        return self.connectivity != "always"
+
+    @property
+    def isl_global(self) -> bool:
+        """Stage 2 is the on-board inter-PS ISL consensus (no GS)."""
+        return self.connectivity == "isl"
 
 
 _REGISTRY: Dict[str, Strategy] = {}
@@ -187,3 +217,28 @@ C_FEDAVG = register(Strategy(
     "c-fedavg", cluster_init="single", weighting="data",
     recluster="never", inherit="copy", cost_model="centralized",
     description="centralized: raw data to one satellite server (K=1)"))
+
+# the five methods above assume always-up links; they pre-date the
+# connectivity subsystem and must keep bit-compatible trajectories
+PAPER_METHODS = tuple(_REGISTRY)
+
+# ---- connectivity-aware methods (time-varying contact plans) --------------
+
+FEDSPACE = register(Strategy(
+    "fedspace", cluster_init="position", weighting="data",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    connectivity="visibility",
+    description="FedSpace-style (arXiv 2202.01267): participation gated "
+                "by ISL reachability to the cluster PS, hop-aware upload "
+                "costs, and global aggregation deferred until a "
+                "ground-station contact window (relay via the visible "
+                "gateway satellite)"))
+
+ISL_ONBOARD = register(Strategy(
+    "isl-onboard", cluster_init="position", weighting="loss",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    connectivity="isl",
+    description="fully on-board FL (arXiv 2307.08346): no ground station; "
+                "stage 2 is an all-to-all cluster-model exchange between "
+                "PSs over multi-hop ISL routes, fired when every PS pair "
+                "is mutually reachable"))

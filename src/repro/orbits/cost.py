@@ -69,6 +69,68 @@ def ground_round_costs(ps_sat_positions, gs_position, model_bits: float,
     return jnp.max(t), jnp.sum(e)
 
 
+def routed_cluster_round_costs(tpb_to_ps, participating, data_sizes, freqs,
+                               model_bits: float, lp: LinkParams,
+                               cp: ComputeParams
+                               ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Hop-aware intra-cluster round: like :func:`cluster_round_costs`
+    but each member's upload follows its multi-hop ISL route to the PS.
+
+    tpb_to_ps (C,): route seconds-per-bit member -> its PS
+    (``orbits/topology.route_time_per_bit``); inf = unreachable, and such
+    members must be masked out of ``participating``.  Every hop along the
+    route retransmits at ``P0``, so route energy is ``P0 * bits * tpb``;
+    the PS broadcast back is one more route transmission."""
+    part_f = participating.astype(jnp.float32)
+    t_cmp = compute_time_s(data_sizes, freqs, cp)
+    t_com = jnp.where(participating, model_bits * tpb_to_ps, 0.0)
+    t_round = jnp.max(jnp.where(participating, t_cmp + t_com, 0.0))
+    e = part_f * (2.0 * lp.tx_power_w * t_com
+                  + compute_energy_j(data_sizes, freqs, cp))
+    return t_round, jnp.sum(e)
+
+
+def routed_ground_round_costs(tpb_ps_to_gateway, gateway_gs_dist_km,
+                              model_bits: float, lp: LinkParams
+                              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Stage 2 via a relay gateway: each cluster PS routes its model over
+    ISLs to the gateway satellite (the one currently clearing the ground
+    station's elevation mask), which exchanges it with the GS.
+
+    tpb_ps_to_gateway (K,): route seconds-per-bit PS -> gateway (0 for a
+    PS that *is* the gateway).  The gateway-GS link is ONE physical link,
+    so the K cluster-model uplinks serialize over it (K transfers) and
+    the global model comes back as one broadcast (1 transfer) — time and
+    energy charge the same K+1 link transfers; ISL routes to/from the
+    gateway are disjoint and run in parallel (max over PS for time, each
+    PS pays up + broadcast-back route energy)."""
+    k = tpb_ps_to_gateway.shape[0]
+    t_route = model_bits * tpb_ps_to_gateway                      # (K,)
+    t_link = comm_time_s(model_bits, gateway_gs_dist_km, lp, to_ground=True)
+    t = jnp.max(t_route) + (k + 1) * t_link
+    e = jnp.sum(2.0 * lp.tx_power_w * t_route) \
+        + (k + 1) * tx_energy_j(model_bits, gateway_gs_dist_km, lp,
+                                to_ground=True)
+    return t, e
+
+
+def isl_consensus_costs(tpb_ps_pairs, model_bits: float, lp: LinkParams
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Ground-station-free stage 2: the K cluster PSs exchange their
+    cluster models all-to-all over ISL routes and each computes the same
+    global aggregate on board (Razmi et al., arXiv 2307.08346 flavor).
+
+    tpb_ps_pairs (K,K): route seconds-per-bit between PSs (diagonal 0).
+    Exchanges proceed in parallel, so time is the worst pair; energy sums
+    every directed transfer."""
+    k = tpb_ps_pairs.shape[0]
+    off_diag = ~jnp.eye(k, dtype=bool)
+    t_pair = jnp.where(off_diag, model_bits * tpb_ps_pairs, 0.0)
+    t = jnp.max(t_pair)
+    e = lp.tx_power_w * jnp.sum(t_pair)
+    return t, e
+
+
 def cfedavg_round_costs(positions, server_position, participating,
                         data_sizes, freqs, sample_bits: float,
                         server_freq_hz: float, lp: LinkParams,

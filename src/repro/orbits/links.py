@@ -40,6 +40,13 @@ def comm_time_s(bits: float, dist_km: jnp.ndarray, p: LinkParams,
     return bits / jnp.maximum(rate_bps(dist_km, p, to_ground), 1.0)
 
 
+def time_per_bit(dist_km: jnp.ndarray, p: LinkParams,
+                 to_ground: bool = False) -> jnp.ndarray:
+    """Seconds per bit over one hop (1 / r_i) — the edge weight the ISL
+    router (`orbits/topology.py`) minimizes over multi-hop routes."""
+    return 1.0 / jnp.maximum(rate_bps(dist_km, p, to_ground), 1.0)
+
+
 def tx_energy_j(bits: float, dist_km: jnp.ndarray, p: LinkParams,
                 to_ground: bool = False) -> jnp.ndarray:
     """Eq. 8 summand: P0 * |w| / r_i."""

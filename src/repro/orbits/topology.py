@@ -1,0 +1,124 @@
+"""Inter-satellite-link (ISL) topology: line-of-sight adjacency and
+bounded multi-hop shortest-path routing.
+
+The FedHC engine treats every link as always-up and every transfer as a
+straight-line hop.  Real LEO connectivity is neither: two satellites can
+talk only if the segment between them clears the Earth (plus a max slant
+range set by the terminal), and a member reaches its cluster PS over a
+multi-hop ISL route whose cost is the *sum of per-hop* transmission times
+— the per-hop rate (Eq. 6) is a log of per-hop distance, so route cost is
+not a function of end-to-end distance.
+
+Everything here is pure jnp and static-shape so the round scan can trace
+through it:
+
+* :func:`line_of_sight` / :func:`isl_adjacency` — Earth-occlusion test
+  (min distance of the inter-satellite segment to the geocenter) AND a
+  max-range cutoff;
+* :func:`min_plus_closure` — all-pairs shortest paths by min-plus matrix
+  squaring, so a hop bound of ``H`` costs ``ceil(log2(H))`` dense
+  ``(N,N,N)`` relaxations, all jit/vmap-able;
+* :func:`route_time_per_bit` — the quantity the cost model consumes:
+  seconds-per-bit of the best ``<= max_hops`` ISL route between every
+  satellite pair (``inf`` when no route exists), with edge weights
+  ``1 / rate_bps`` from the paper's link model.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.orbits import links as links_lib
+from repro.orbits.constellation import R_EARTH_KM
+
+
+def pairwise_dist_km(positions: jnp.ndarray) -> jnp.ndarray:
+    """(N,3) ECI km -> (N,N) inter-satellite distances."""
+    diff = positions[:, None, :] - positions[None, :, :]
+    return jnp.linalg.norm(diff, axis=-1)
+
+
+def segment_min_dist_to_origin(positions: jnp.ndarray) -> jnp.ndarray:
+    """(N,3) -> (N,N): min distance of the segment sat_i -> sat_j to the
+    geocenter (the occlusion discriminant).  Diagonal = |sat_i|."""
+    a = positions[:, None, :]                       # (N,1,3)
+    b = positions[None, :, :]                       # (1,N,3)
+    ab = b - a                                      # (N,N,3)
+    denom = jnp.maximum(jnp.sum(ab * ab, axis=-1), 1e-12)
+    t = jnp.clip(-jnp.sum(a * ab, axis=-1) / denom, 0.0, 1.0)
+    closest = a + t[..., None] * ab
+    return jnp.linalg.norm(closest, axis=-1)
+
+
+def line_of_sight(positions: jnp.ndarray,
+                  body_radius_km: float = R_EARTH_KM) -> jnp.ndarray:
+    """(N,N) bool: the straight segment between the two satellites clears
+    the occluding body."""
+    return segment_min_dist_to_origin(positions) >= body_radius_km
+
+
+def isl_adjacency(positions: jnp.ndarray, max_range_km: float,
+                  body_radius_km: float = R_EARTH_KM) -> jnp.ndarray:
+    """(N,N) bool ISL graph: line-of-sight AND within terminal range.
+    Symmetric, no self-loops."""
+    n = positions.shape[0]
+    d = pairwise_dist_km(positions)
+    adj = line_of_sight(positions, body_radius_km) & (d <= max_range_km)
+    return adj & ~jnp.eye(n, dtype=bool)
+
+
+def _min_plus_mul(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(min,+) matrix product: out[i,j] = min_k a[i,k] + b[k,j]."""
+    return jnp.min(a[:, :, None] + b[None, :, :], axis=1)
+
+
+def min_plus_closure(w: jnp.ndarray, max_hops: int) -> jnp.ndarray:
+    """All-pairs shortest path weights using <= ``max_hops`` edges,
+    exactly.
+
+    ``w`` is the (N,N) one-hop weight matrix: 0 on the diagonal, edge
+    weight where an edge exists, +inf elsewhere.  Because the diagonal is
+    0, ``w`` is reflexive in the (min,+) semiring — ``w^a`` admits *up
+    to* ``a`` hops and ``w^(a+b) = w^a * w^b`` — so exponentiation by
+    squaring computes the exact ``w^max_hops`` in O(log max_hops) dense
+    relaxations (no rounding of the hop bound up to a power of two)."""
+    e = max(1, int(max_hops))
+    n = w.shape[0]
+    # (min,+) identity: 0 on the diagonal, inf elsewhere
+    result = jnp.where(jnp.eye(n, dtype=bool), 0.0, jnp.inf)
+    base = w
+    while e:
+        if e & 1:
+            result = _min_plus_mul(result, base)
+        e >>= 1
+        if e:
+            base = _min_plus_mul(base, base)
+    return result
+
+
+def hop_counts(adj: jnp.ndarray, max_hops: int) -> jnp.ndarray:
+    """(N,N) f32 minimum hop count through the ISL graph (inf when
+    unreachable in <= max_hops); diagnostic companion to the time
+    closure."""
+    n = adj.shape[0]
+    w = jnp.where(adj, 1.0, jnp.inf)
+    w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
+    return min_plus_closure(w, max_hops)
+
+
+def route_time_per_bit(positions: jnp.ndarray, lp: links_lib.LinkParams,
+                       max_range_km: float, max_hops: int,
+                       body_radius_km: float = R_EARTH_KM) -> jnp.ndarray:
+    """(N,N) f32 seconds-per-bit of the cheapest ISL route.
+
+    Edge weight is ``1 / r_ij`` (Eq. 6 rate over the hop distance), so the
+    closure minimizes total store-and-forward transmission time; an upload
+    of ``bits`` along the route then costs ``bits * route_time_per_bit``
+    seconds and ``P0 * bits * route_time_per_bit`` joules (every hop
+    retransmits at ``P0``).  ``inf`` marks pairs with no route within
+    ``max_hops`` hops."""
+    n = positions.shape[0]
+    d = pairwise_dist_km(positions)
+    adj = isl_adjacency(positions, max_range_km, body_radius_km)
+    w = jnp.where(adj, links_lib.time_per_bit(d, lp), jnp.inf)
+    w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
+    return min_plus_closure(w, max_hops)

@@ -13,8 +13,9 @@ SCRIPT = textwrap.dedent("""
     from repro.core import aggregation as agg
     from repro.core.aggregation_spmd import make_spmd_aggregator
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    # jax 0.4.x make_mesh has no axis_types kwarg (AxisType landed in
+    # 0.5); the default (auto) axis behavior is what this test wants
+    mesh = jax.make_mesh((8,), ("data",))
     C, K = 8, 2
     clusters = ((0, 1, 2, 3), (4, 5, 6, 7))
     rng = jax.random.PRNGKey(0)

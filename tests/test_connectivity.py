@@ -1,0 +1,181 @@
+"""Connectivity-gated engine paths: golden parity for the always-up
+methods, fedspace/isl-onboard end-to-end, FedSpace-style pending-global
+deferral, and the one-device-transfer property on the contact-plan path."""
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import engine
+from repro.core import strategies as strat_lib
+from repro.core.fedhc import FLRunConfig
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "engine_always.json")
+
+
+def _cfg(method, **kw):
+    base = dict(method=method, num_clients=32, num_clusters=3, rounds=16,
+                rounds_per_global=4, eval_every=8, samples_per_client=64,
+                local_steps=1, eval_size=256)
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+# ---- parity pin: connectivity="always" is the pre-PR engine ---------------
+
+
+@pytest.mark.parametrize("method", strat_lib.PAPER_METHODS)
+def test_always_path_pinned_to_pre_connectivity_engine(method):
+    """The five always-up methods must reproduce the engine trajectory
+    recorded *before* the connectivity subsystem landed (the golden file
+    is a verbatim `engine.run` capture at that commit)."""
+    with open(GOLDEN) as f:
+        golden = json.load(f)[method]
+    h = engine.run(FLRunConfig(method=method, num_clients=16,
+                               num_clusters=3, rounds=20, eval_every=5,
+                               samples_per_client=64, local_steps=2,
+                               eval_size=256))
+    assert h["round"] == golden["round"]
+    assert h["reclusters"] == golden["reclusters"]
+    np.testing.assert_allclose(h["time_s"], golden["time_s"], rtol=1e-5)
+    np.testing.assert_allclose(h["energy_j"], golden["energy_j"], rtol=1e-5)
+    np.testing.assert_allclose(h["loss"], golden["loss"], rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(h["acc"], golden["acc"], atol=5e-3)
+
+
+# ---- the two connectivity-aware methods, end-to-end -----------------------
+
+
+@pytest.mark.parametrize("method", ["fedspace", "isl-onboard"])
+def test_gated_methods_run_end_to_end(method):
+    """`strategies.get` -> `engine.run`: finite histories, monotone cost
+    accounting, and stage-2 actually firing through the contact plan on a
+    connected 32-sat constellation."""
+    strategy = strat_lib.get(method)
+    assert strategy.visibility_gated
+    h = engine.run(_cfg(method))
+    assert np.all(np.isfinite(h["time_s"]))
+    assert np.all(np.isfinite(h["energy_j"]))
+    assert np.all(np.isfinite(h["acc"]))
+    assert np.all(np.diff(h["time_s"]) > 0)
+    assert np.all(np.diff(h["energy_j"]) > 0)
+    assert h["global_rounds"] >= 1
+
+
+def test_gated_methods_learn():
+    h = engine.run(_cfg("fedspace", rounds=30, eval_every=15,
+                        local_steps=2))
+    assert h["acc"][-1] > 0.2               # chance = 0.1
+
+
+def test_isl_onboard_ignores_ground_station():
+    """isl-onboard consensus must be invariant to the GS elevation mask
+    (there is no ground station in its stage 2)."""
+    h_lo = engine.run(_cfg("isl-onboard", gs_min_elevation_deg=10.0))
+    h_hi = engine.run(_cfg("isl-onboard", gs_min_elevation_deg=89.0))
+    assert h_lo["global_rounds"] == h_hi["global_rounds"] >= 1
+    np.testing.assert_allclose(h_lo["time_s"], h_hi["time_s"], rtol=1e-6)
+
+
+def test_isl_onboard_stalls_without_links():
+    """Shrinking the ISL terminal range to nothing removes every route:
+    no PS pair is reachable, stage 2 never fires, yet the run stays
+    finite (PSs still 'reach' themselves, so clusters keep training)."""
+    h = engine.run(_cfg("isl-onboard", isl_max_range_km=1.0))
+    assert h["global_rounds"] == 0
+    assert np.all(np.isfinite(h["time_s"]))
+    assert np.all(np.isfinite(h["energy_j"]))
+    assert np.all(np.isfinite(h["acc"]))
+
+
+# ---- FedSpace-style pending-aggregation deferral --------------------------
+
+
+def test_fedspace_blackout_defers_forever():
+    """A ~90 deg elevation mask closes every window: stage 2 never fires
+    and the pending flag is still raised at the end of the run."""
+    cfg = _cfg("fedspace", gs_min_elevation_deg=89.9)
+    state, outs = engine.simulate(cfg)
+    assert int(np.asarray(outs.did_global).sum()) == 0
+    assert bool(state.pending_global)
+
+
+def test_fedspace_open_sky_fires_on_cadence():
+    """With the mask fully open (every satellite always visible) global
+    rounds fire exactly on the every-m cadence and nothing stays
+    pending."""
+    cfg = _cfg("fedspace", gs_min_elevation_deg=-90.0)
+    state, outs = engine.simulate(cfg)
+    dg = np.asarray(outs.did_global)
+    cadence = ((np.arange(cfg.rounds) + 1) % cfg.rounds_per_global
+               == 0).astype(np.int32)
+    np.testing.assert_array_equal(dg, cadence)
+    assert not bool(state.pending_global)
+
+
+def test_fedspace_defers_then_catches_up():
+    """A 30 deg mask opens windows intermittently: at least one cadence
+    round finds the sky closed (missed), and the pending flag fires the
+    aggregation at the next open round (catch-up off-cadence)."""
+    cfg = _cfg("fedspace", rounds=24, round_minutes=4.0,
+               gs_min_elevation_deg=30.0)
+    _, outs = engine.simulate(cfg)
+    dg = np.asarray(outs.did_global)
+    cadence = (np.arange(cfg.rounds) + 1) % cfg.rounds_per_global == 0
+    assert np.any(cadence & (dg == 0)), dg    # a window was missed...
+    assert np.any(~cadence & (dg == 1)), dg   # ...and caught up later
+    assert dg.sum() >= 1
+
+
+def test_always_strategies_never_defer():
+    _, outs = engine.simulate(_cfg("fedhc", num_clients=16))
+    dg = np.asarray(outs.did_global)
+    cadence = ((np.arange(16) + 1) % 4 == 0).astype(np.int32)
+    np.testing.assert_array_equal(dg, cadence)
+
+
+# ---- one-device-transfer property on the contact-plan path ----------------
+
+
+def test_contact_plan_path_single_device_transfer():
+    """The visibility-gated scan must stay sync-free: the contact plan is
+    gathered on device, the pending flag lives in the carry, and the only
+    device->host transfer is the final stacked history."""
+    cfg = _cfg("fedspace", rounds=8, eval_every=4)
+    state0, data = engine.setup(cfg)
+    assert data.plan is not None
+    fn = engine._scan_fn(cfg)
+    fn(state0, data)                        # warm-up: trace + compile
+    with jax.transfer_guard("disallow"):
+        _, outs = fn(state0, data)
+        jax.block_until_ready(outs)
+    h = jax.device_get(outs)                # the one transfer
+    assert np.asarray(h.acc).shape == (cfg.rounds,)
+    assert np.asarray(h.did_global).shape == (cfg.rounds,)
+
+
+def test_always_path_has_no_plan():
+    _, data = engine.setup(_cfg("fedhc", num_clients=16))
+    assert data.plan is None
+
+
+def test_run_many_seeds_shares_one_plan():
+    """The vmapped sweep broadcasts a single contact plan across seeds
+    (it is seed-independent) and its rows match solo runs."""
+    cfg = _cfg("fedspace", rounds=8, eval_every=4)
+    sweep = engine.run_many_seeds(cfg, seeds=(0, 1))
+    assert sweep["acc"].shape == (2, cfg.rounds)
+    for row, seed in enumerate((0, 1)):
+        _, solo = engine.simulate(cfg, seed=seed)
+        np.testing.assert_allclose(sweep["time_s"][row],
+                                   np.asarray(solo.time_s), rtol=1e-4)
+        np.testing.assert_array_equal(sweep["global_rounds"][row],
+                                      int(np.asarray(solo.did_global).sum()))
+        mask = np.asarray(solo.evaluated)
+        np.testing.assert_allclose(sweep["acc"][row][mask],
+                                   np.asarray(solo.acc)[mask],
+                                   rtol=1e-5, atol=1e-5)

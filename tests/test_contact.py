@@ -1,0 +1,116 @@
+"""Contact plans: sampled visibility/route arrays, scan-side lookup, and
+host-side window extraction."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbits import contact as C
+from repro.orbits import topology as T
+from repro.orbits.constellation import (Constellation,
+                                        ground_station_position, visible)
+from repro.orbits.links import LinkParams
+
+
+def _plan(dt_s=120.0, **kw):
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    return c, C.build_contact_plan(c, LinkParams(), dt_s=dt_s, **kw)
+
+
+def test_plan_shapes_and_horizon():
+    c, plan = _plan(dt_s=120.0)
+    t = int(round(c.period_s / 120.0))
+    n = c.num_sats
+    assert plan.times.shape == (t,)
+    assert plan.gs_visible.shape == (t, n)
+    assert plan.gs_dist_km.shape == (t, n)
+    assert plan.isl_tpb.shape == (t, n, n)
+    # cadence snaps to horizon / n so the modulo wrap IS the horizon
+    # (requested 120 s, actual period/56): no phase drift across orbits
+    dt = c.period_s / t
+    np.testing.assert_allclose(np.diff(np.asarray(plan.times)), dt,
+                               rtol=1e-5)
+    np.testing.assert_allclose(t * dt, c.period_s, rtol=1e-6)
+
+
+def test_plan_samples_match_direct_recompute():
+    """Every stored sample equals the quantity recomputed from the
+    propagator at that instant (visibility, GS range, route costs)."""
+    c, plan = _plan(dt_s=300.0)
+    lp = LinkParams()
+    for i in (0, 3, 11):
+        t = float(plan.times[i])
+        pos = c.positions(t)
+        gs = ground_station_position(t_s=t)
+        np.testing.assert_array_equal(np.asarray(plan.gs_visible[i]),
+                                      np.asarray(visible(pos, gs, 10.0)))
+        np.testing.assert_allclose(
+            np.asarray(plan.gs_dist_km[i]),
+            np.linalg.norm(np.asarray(pos) - np.asarray(gs)[None], axis=-1),
+            rtol=1e-5)
+        want = np.asarray(T.route_time_per_bit(pos, lp, 8000.0, 8))
+        got = np.asarray(plan.isl_tpb[i])
+        finite = np.isfinite(want)
+        np.testing.assert_allclose(got[finite], want[finite], rtol=1e-5)
+        assert np.array_equal(np.isfinite(got), finite)
+
+
+def test_lookup_picks_nearest_sample_and_wraps():
+    c, plan = _plan(dt_s=120.0)
+    n_t = plan.times.shape[0]
+    dt = float(plan.times[1] - plan.times[0])
+    vis1, dist1, tpb1 = C.lookup(plan, jnp.float32(dt))
+    np.testing.assert_array_equal(np.asarray(vis1),
+                                  np.asarray(plan.gs_visible[1]))
+    np.testing.assert_allclose(np.asarray(tpb1),
+                               np.asarray(plan.isl_tpb[1]))
+    # rounding: 1.4 dt is nearer sample 1 than sample 2
+    vis_r, _, _ = C.lookup(plan, jnp.float32(1.4 * dt))
+    np.testing.assert_array_equal(np.asarray(vis_r),
+                                  np.asarray(plan.gs_visible[1]))
+    # wrap: a full horizon (= the orbital period) later lands on the
+    # same row, even many orbits out (no cumulative phase drift)
+    for orbits in (1, 10):
+        t_wrap = float(plan.times[3]) + orbits * n_t * dt
+        vis3, dist3, _ = C.lookup(plan, jnp.float32(t_wrap))
+        np.testing.assert_array_equal(np.asarray(vis3),
+                                      np.asarray(plan.gs_visible[3]))
+        np.testing.assert_allclose(np.asarray(dist3),
+                                   np.asarray(plan.gs_dist_km[3]))
+    # and n_t * dt really is the orbital period the propagator uses
+    np.testing.assert_allclose(n_t * dt, c.period_s, rtol=1e-5)
+
+
+def test_lookup_is_jit_and_traced_time_friendly():
+    import jax
+    _, plan = _plan(dt_s=300.0)
+    f = jax.jit(lambda t: C.lookup(plan, t)[0])
+    np.testing.assert_array_equal(np.asarray(f(jnp.float32(600.0))),
+                                  np.asarray(plan.gs_visible[2]))
+
+
+def test_contact_windows_cover_visibility():
+    """Window extraction reproduces the boolean track: total window
+    duration equals dt * (# visible samples) and windows are disjoint,
+    ordered half-open intervals."""
+    _, plan = _plan(dt_s=120.0)
+    vis = np.asarray(plan.gs_visible)
+    sat = int(np.argmax(vis.sum(0)))        # most-visible satellite
+    assert vis[:, sat].sum() > 0            # it does get contacts
+    windows = C.contact_windows(plan, sat)
+    assert windows
+    dt = float(plan.times[1] - plan.times[0])
+    total = sum(e - s for s, e in windows)
+    np.testing.assert_allclose(total, dt * vis[:, sat].sum(), rtol=1e-5)
+    for (s0, e0), (s1, e1) in zip(windows, windows[1:]):
+        assert e0 < s1                      # disjoint and ordered
+    # no satellite sees the ground station from the whole orbit
+    assert vis.all(axis=0).sum() == 0
+
+
+def test_gs_blackout_and_open_masks():
+    """Elevation mask extremes: +89.9 deg => no contacts anywhere in the
+    plan; -90 deg => every satellite is always 'visible'."""
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    closed = C.build_contact_plan(c, dt_s=600.0, min_elevation_deg=89.9)
+    assert int(np.asarray(closed.gs_visible).sum()) == 0
+    open_ = C.build_contact_plan(c, dt_s=600.0, min_elevation_deg=-90.0)
+    assert bool(np.asarray(open_.gs_visible).all())

@@ -27,12 +27,20 @@ def test_dataset_shapes_and_balance():
 
 
 def test_split_shares_templates():
-    (x, y), (tx, ty) = make_split(jax.random.PRNGKey(0), MNIST_LIKE, 512, 128)
-    # same class => means correlate across split (shared templates)
-    m_train = np.asarray(x)[np.asarray(y) == 3].mean(0).ravel()
-    m_test = np.asarray(tx)[np.asarray(ty) == 3].mean(0).ravel()
-    corr = np.corrcoef(m_train, m_test)[0, 1]
-    assert corr > 0.5, corr
+    # enough samples that the per-class means estimate the templates: at
+    # 512/128 the test split has ~13 samples/class and noise (scale 1.5
+    # vs template scale 0.6) swamps the estimate (corr ~0.43)
+    (x, y), (tx, ty) = make_split(jax.random.PRNGKey(0), MNIST_LIKE,
+                                  2048, 512)
+    x, y, tx, ty = (np.asarray(a) for a in (x, y, tx, ty))
+    # same class => means correlate across the split (shared templates)
+    m_train = np.stack([x[y == c].mean(0).ravel() for c in range(10)])
+    m_test = np.stack([tx[ty == c].mean(0).ravel() for c in range(10)])
+    corr = np.corrcoef(m_train, m_test)[:10, 10:]   # (10,10) train x test
+    assert corr.diagonal().min() > 0.5, corr.diagonal()
+    # ...and correlate more than any *other* class's template does
+    off = corr - np.diag(np.full(10, np.inf))
+    assert corr.diagonal().min() > off.max(), (corr.diagonal(), off.max())
 
 
 def test_dirichlet_partition_non_iid():

@@ -9,7 +9,11 @@ import pytest
 from repro.core import engine
 from repro.core import clustering as cl
 from repro.core import strategies as strat_lib
-from repro.core.fedhc import FLRunConfig, METHODS, run_fl, run_fl_legacy
+from repro.core.fedhc import FLRunConfig, run_fl, run_fl_legacy
+
+# the legacy loop only implements the five always-up paper methods; the
+# connectivity-gated strategies are engine-only (tests/test_connectivity.py)
+METHODS = strat_lib.PAPER_METHODS
 
 
 def _cfg(method, **kw):
@@ -131,10 +135,16 @@ def test_engine_survives_empty_cluster_threshold():
 def test_registry_has_five_paper_methods():
     assert set(METHODS) == {"fedhc", "fedhc-nomaml", "h-base", "fedce",
                             "c-fedavg"}
+    assert set(strat_lib.names()) >= set(METHODS) | {"fedspace",
+                                                     "isl-onboard"}
     s = strat_lib.get("fedhc")
     assert s.loss_weighted and s.reclusters and s.maml and not s.centralized
     assert not strat_lib.get("h-base").reclusters
     assert strat_lib.get("c-fedavg").centralized
+    # the paper five are always-up; the connectivity axis is orthogonal
+    assert all(not strat_lib.get(m).visibility_gated for m in METHODS)
+    assert strat_lib.get("fedspace").visibility_gated
+    assert strat_lib.get("isl-onboard").isl_global
 
 
 def test_registry_rejects_unknown_fields():
@@ -142,5 +152,11 @@ def test_registry_rejects_unknown_fields():
         strat_lib.Strategy("bad", cluster_init="nope")
     with pytest.raises(ValueError):
         strat_lib.Strategy("bad", weighting="uniform")
+    with pytest.raises(ValueError):
+        strat_lib.Strategy("bad", connectivity="sometimes")
+    with pytest.raises(ValueError):
+        # centralized baseline has no PS to route to
+        strat_lib.Strategy("bad", cluster_init="single",
+                           cost_model="centralized", connectivity="visibility")
     with pytest.raises(KeyError):
         strat_lib.get("does-not-exist")

@@ -44,6 +44,64 @@ def test_visibility_elevation_gate():
     assert not bool(C.visible(jnp.asarray(far)[None], gs)[0])
 
 
+def test_elevation_horizon_grazing():
+    """A satellite exactly on the geometric horizon (tangent ray) sits at
+    ~0 deg elevation: just above it is visible with a 0 deg mask, just
+    below is not."""
+    gs = C.ground_station_position(lat_deg=0.0, lon_deg=0.0, t_s=0.0)
+    r = C.R_EARTH_KM + 1300.0
+    # tangency: central angle a with cos(a) = R_e / r puts the satellite
+    # on the ray grazing the ground station's horizon
+    a = np.arccos(C.R_EARTH_KM / r)
+    for eps, vis_want in ((-1e-3, True), (1e-3, False)):
+        ang = a + eps
+        sat = jnp.asarray([[r * np.cos(ang), r * np.sin(ang), 0.0]])
+        el = float(C.elevation_deg(sat, gs)[0])
+        assert abs(el) < 0.25, el            # grazing: within a quarter deg
+        assert bool(C.visible(sat, gs, min_elevation_deg=0.0)[0]) == vis_want
+
+
+def test_elevation_below_horizon_is_negative():
+    gs = C.ground_station_position(lat_deg=0.0, lon_deg=0.0, t_s=0.0)
+    r = C.R_EARTH_KM + 1300.0
+    # 120 deg central angle: well past the limb
+    sat = jnp.asarray([[r * np.cos(2.1), r * np.sin(2.1), 0.0]])
+    el = float(C.elevation_deg(sat, gs)[0])
+    assert el < -10.0
+    assert not bool(C.visible(sat, gs)[0])
+    # the clip keeps the arcsin finite even for a degenerate zero-range
+    # satellite placed exactly at the ground station
+    el_deg = C.elevation_deg(jnp.asarray(gs)[None], gs)
+    assert np.isfinite(float(el_deg[0]))
+
+
+def test_ground_station_rotates_full_period():
+    """The ground station track is periodic at the sidereal rate: after a
+    full 2*pi/OMEGA_EARTH rotation it returns to its start, and at half a
+    rotation it is on the opposite side of the spin axis."""
+    day = 2.0 * np.pi / C.OMEGA_EARTH
+    g0 = np.asarray(C.ground_station_position(t_s=0.0))
+    g_full = np.asarray(C.ground_station_position(t_s=day))
+    np.testing.assert_allclose(g0, g_full, atol=1e-3)
+    g_half = np.asarray(C.ground_station_position(t_s=day / 2.0))
+    np.testing.assert_allclose(g_half[:2], -g0[:2], atol=1e-3)
+    np.testing.assert_allclose(g_half[2], g0[2], atol=1e-6)
+    np.testing.assert_allclose(np.linalg.norm(g_half), C.R_EARTH_KM,
+                               rtol=1e-6)
+
+
+def test_visibility_changes_as_gs_rotates():
+    """Over a full rotation the set of visible satellites of a *static*
+    snapshot changes — the elevation mask really tracks the rotating
+    station, not a fixed cone."""
+    c = C.Constellation(num_planes=4, sats_per_plane=8)
+    pos = c.positions(0.0)
+    day = 2.0 * np.pi / C.OMEGA_EARTH
+    masks = [np.asarray(C.visible(pos, C.ground_station_position(t_s=f * day)))
+             for f in (0.0, 0.25, 0.5, 0.75)]
+    assert any(not np.array_equal(masks[0], m) for m in masks[1:])
+
+
 def test_rate_decreases_with_distance():
     p = L.LinkParams()
     d = jnp.asarray([100.0, 500.0, 2000.0])

@@ -1,0 +1,120 @@
+"""ISL topology: Earth-occlusion line-of-sight, range cutoff, and the
+bounded min-plus shortest-path router against a numpy Floyd-Warshall
+oracle."""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.orbits import topology as T
+from repro.orbits.constellation import Constellation, R_EARTH_KM
+from repro.orbits.links import LinkParams, time_per_bit
+
+
+def test_line_of_sight_occluded_by_earth():
+    """Two low satellites on opposite sides of Earth: the chord passes
+    through the planet, so no LOS even with an unlimited-range terminal."""
+    alt = R_EARTH_KM + 100.0
+    pos = jnp.asarray([[alt, 0.0, 0.0], [-alt, 0.0, 0.0]])
+    los = T.line_of_sight(pos)
+    assert not bool(los[0, 1]) and not bool(los[1, 0])
+    adj = T.isl_adjacency(pos, max_range_km=1e6)
+    assert not bool(adj[0, 1])
+
+
+def test_line_of_sight_clear_overhead():
+    """Two nearby satellites with a chord that never dips below the
+    surface see each other; adjacency is symmetric with no self-loops."""
+    r = R_EARTH_KM + 1300.0
+    pos = jnp.asarray([[r, 0.0, 0.0],
+                       [r * np.cos(0.3), r * np.sin(0.3), 0.0]])
+    adj = T.isl_adjacency(pos, max_range_km=5000.0)
+    assert bool(adj[0, 1]) and bool(adj[1, 0])
+    assert not bool(adj[0, 0]) and not bool(adj[1, 1])
+
+
+def test_range_cutoff_blocks_long_links():
+    r = R_EARTH_KM + 1300.0
+    pos = jnp.asarray([[r, 0.0, 0.0],
+                       [r * np.cos(0.3), r * np.sin(0.3), 0.0]])
+    d = float(T.pairwise_dist_km(pos)[0, 1])
+    assert bool(T.isl_adjacency(pos, max_range_km=d + 1.0)[0, 1])
+    assert not bool(T.isl_adjacency(pos, max_range_km=d - 1.0)[0, 1])
+
+
+def test_min_plus_closure_matches_floyd_warshall():
+    rng = np.random.default_rng(0)
+    n = 8
+    w = np.full((n, n), np.inf)
+    np.fill_diagonal(w, 0.0)
+    for _ in range(14):                     # random sparse symmetric graph
+        i, j = rng.integers(0, n, 2)
+        if i != j:
+            w[i, j] = w[j, i] = float(rng.uniform(0.5, 3.0))
+    want = w.copy()                         # Floyd-Warshall oracle
+    for k in range(n):
+        want = np.minimum(want, want[:, k:k + 1] + want[k:k + 1, :])
+    got = np.asarray(T.min_plus_closure(jnp.asarray(w), max_hops=n))
+    finite = np.isfinite(want)
+    np.testing.assert_allclose(got[finite], want[finite], rtol=1e-6)
+    assert np.array_equal(np.isfinite(got), finite)
+
+
+def test_min_plus_hop_bound_exact():
+    """A 5-node chain: reaching node h from node 0 needs exactly h hops.
+    The bound must be exact for every max_hops, including non-powers of
+    two (no silent rounding up to the next power of two)."""
+    n = 5
+    w = np.full((n, n), np.inf)
+    np.fill_diagonal(w, 0.0)
+    for i in range(n - 1):
+        w[i, i + 1] = w[i + 1, i] = 1.0
+    for h in (1, 2, 3, 4):
+        d = np.asarray(T.min_plus_closure(jnp.asarray(w), max_hops=h))
+        for j in range(1, n):
+            if j <= h:
+                assert d[0, j] == float(j), (h, j)
+            else:
+                assert not np.isfinite(d[0, j]), (h, j)
+
+
+def test_hop_counts_on_walker_constellation():
+    """The 64-sat paper constellation is fully connected in few hops."""
+    c = Constellation(num_planes=8, sats_per_plane=8)
+    adj = T.isl_adjacency(c.positions(0.0), max_range_km=8000.0)
+    hops = np.asarray(T.hop_counts(adj, max_hops=8))
+    assert np.all(np.isfinite(hops))
+    assert hops.max() <= 8
+    assert np.all(np.diag(hops) == 0.0)
+
+
+def test_route_time_per_bit_relay_beats_no_route():
+    """Geometry where the direct link is occluded but a two-hop relay
+    exists: the router must find the relay path with the summed per-hop
+    cost."""
+    r = R_EARTH_KM + 500.0
+    # a and b nearly antipodal (occluded); c high above the pole relays
+    a = jnp.asarray([r, 0.0, 0.0])
+    b = jnp.asarray([-r, 0.0, 0.0])
+    relay = jnp.asarray([0.0, 0.0, 3.0 * R_EARTH_KM])
+    pos = jnp.stack([a, b, relay])
+    lp = LinkParams()
+    tpb = T.route_time_per_bit(pos, lp, max_range_km=1e6, max_hops=4)
+    assert not bool(T.line_of_sight(pos)[0, 1])
+    d_ar = float(jnp.linalg.norm(a - relay))
+    d_rb = float(jnp.linalg.norm(relay - b))
+    want = float(time_per_bit(jnp.asarray(d_ar), lp)
+                 + time_per_bit(jnp.asarray(d_rb), lp))
+    np.testing.assert_allclose(float(tpb[0, 1]), want, rtol=1e-6)
+    # route cost is symmetric and the diagonal is free
+    np.testing.assert_allclose(np.asarray(tpb), np.asarray(tpb).T, rtol=1e-6)
+    assert float(tpb[0, 0]) == 0.0
+
+
+def test_sparse_constellation_fragments():
+    """A 4x4 Walker at 1300 km: intra-plane neighbors are 90 deg apart,
+    whose chord dips below the surface — the ISL graph genuinely breaks
+    into islands (the physical reason visibility-gated strategies stall
+    on tiny constellations)."""
+    c = Constellation(num_planes=4, sats_per_plane=4)
+    hops = np.asarray(T.hop_counts(
+        T.isl_adjacency(c.positions(0.0), max_range_km=8000.0), max_hops=8))
+    assert not np.all(np.isfinite(hops))
