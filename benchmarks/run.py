@@ -7,6 +7,8 @@ Sections:
   [clustering]   §III-B PS-selection quality & energy mechanism
   [engine]       scan-compiled engine vs legacy host-loop wall-clock speedup
   [connectivity] contact-plan build cost + fedspace / isl-onboard vs fedhc
+  [scale]        constellation-size sweep (N up to the paper's 800 sats)
+                 + contact-plan f32-vs-bf16 storage tradeoff
   [fig3]         seed-averaged accuracy vs rounds (methods x K x datasets)
   [table1]       time/energy to target accuracy (Table I)
   [roofline]     three-term roofline per (arch x shape) from the dry-run
@@ -47,6 +49,10 @@ def main() -> None:
     section("connectivity")
     from benchmarks import connectivity_bench
     connectivity_bench.main(tiny=args.fast)
+
+    section("scale")
+    from benchmarks import scale_bench
+    scale_bench.main(fast=args.fast)
 
     section("fig3-accuracy")
     from benchmarks import fig3_accuracy, table1_time_energy

@@ -1,19 +1,22 @@
 """FedHC aggregation: loss-weighted intra-cluster (Eq. 5 + Eq. 12) and
 two-stage hierarchical (cluster -> ground-station) model averaging.
 
-Two implementations with identical semantics:
+This module is the **single formulation** both execution paths share: the
+one-hot / segment-matmul form over a leading ``clients`` dim.  It stays
+correct under *dynamic* cluster assignment (the assignment is data, not
+program structure), and under ``jit`` with the clients dim sharded XLA
+lowers the segment matmuls to grouped collectives automatically.
 
-* the **pytree path** (this module): params carry a leading ``clients`` dim;
-  segment ops over that dim.  Used by the CPU FL simulator and as the test
-  oracle.  Under ``jit`` with the clients dim sharded, XLA lowers the segment
-  ops to collectives automatically.
-* the **SPMD path** (`aggregation_spmd.py`): explicit
-  ``psum(axis_index_groups=clusters)`` inside ``shard_map`` — the paper's
-  two-level schedule stated directly as grouped collectives.  Used by the
-  production train step.
+* **single device / test oracle**: call these functions directly (the CPU
+  FL simulator and every parity test do).
+* **SPMD** (`aggregation_spmd.py`): ``hierarchical_round_sharded`` wraps
+  :func:`hierarchical_round` with sharding constraints that pin the
+  clients dim to the client mesh axes — one math, two placements.  The
+  hand-written ``psum(axis_index_groups=clusters)`` shard_map body is kept
+  there only for the static-layout transformer train step.
 
 `repro.kernels.weighted_agg` is the fused Pallas kernel for the stage-1
-weighted reduction.
+weighted reduction (``cluster_aggregate(use_pallas=True)``).
 """
 from __future__ import annotations
 
@@ -53,14 +56,24 @@ def data_weights(data_sizes: jnp.ndarray,
 
 
 def cluster_aggregate(stack, weights: jnp.ndarray, assignment: jnp.ndarray,
-                      k: int):
+                      k: int, *, use_pallas: bool = False):
     """Stage 1: per-cluster weighted average.
 
     stack: pytree (C, ...); weights (C,) already normalized per cluster
     (e.g. from ``loss_weights``).  Returns pytree (K, ...) of cluster PS
-    models."""
+    models.
+
+    ``use_pallas`` routes the reduction through the fused
+    `repro.kernels.weighted_agg_multi` kernel — all K cluster models in
+    one pass over the stack, with the one-hot mask folded into the
+    (C, K) weight matrix; semantics are identical (parity-pinned against
+    this jnp path in ``tests/test_kernels.py``)."""
     one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)    # (C,K)
     wm = one_hot * weights.astype(jnp.float32)[:, None]           # (C,K)
+
+    if use_pallas:
+        from repro.kernels import ops as kernel_ops
+        return kernel_ops.weighted_agg_multi_tree(stack, wm)
 
     def one(x):
         flat = x.reshape(x.shape[0], -1).astype(jnp.float32)
@@ -87,7 +100,8 @@ def broadcast_global(tree, num_clients: int):
 
 def hierarchical_round(stack, losses, data_sizes, assignment, k,
                        participating=None, *, do_global: bool,
-                       loss_weighted: bool = True):
+                       loss_weighted: bool = True,
+                       use_pallas: bool = False):
     """One full FedHC aggregation: stage-1 always; stage-2 when
     ``do_global``.  Non-participating clients keep their local model for
     stage-1 output weighting but receive the aggregate (they re-sync when
@@ -95,22 +109,35 @@ def hierarchical_round(stack, losses, data_sizes, assignment, k,
 
     Returns the new (C, ...) client-model stack."""
     C = losses.shape[0]
-    if loss_weighted:
-        w = loss_weights(losses, assignment, k, participating)
-    else:
-        # per-cluster FedAvg by data size
-        d = data_sizes.astype(jnp.float32)
-        if participating is not None:
-            d = d * participating.astype(jnp.float32)
-        one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
-        denom = one_hot.T @ d
-        w = d / jnp.maximum(denom[assignment], 1e-12)
-
-    cluster_models = cluster_aggregate(stack, w, assignment, k)
+    w = cluster_weights(losses, data_sizes, assignment, k, participating,
+                        loss_weighted=loss_weighted)
+    cluster_models = cluster_aggregate(stack, w, assignment, k,
+                                       use_pallas=use_pallas)
 
     if do_global:
-        one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
-        dk = one_hot.T @ data_sizes.astype(jnp.float32)           # (K,)
-        g = global_aggregate(cluster_models, dk)
-        return broadcast_global(g, C)
+        return global_round(cluster_models, data_sizes, assignment, k, C)
     return broadcast_clusters(cluster_models, assignment)
+
+
+def cluster_weights(losses, data_sizes, assignment, k, participating=None,
+                    *, loss_weighted: bool = True) -> jnp.ndarray:
+    """The stage-1 per-client weight vector: Eq. 12 inverse-loss weights
+    or per-cluster FedAvg data-size weights, both cluster-normalized."""
+    if loss_weighted:
+        return loss_weights(losses, assignment, k, participating)
+    d = data_sizes.astype(jnp.float32)
+    if participating is not None:
+        d = d * participating.astype(jnp.float32)
+    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+    denom = one_hot.T @ d
+    return d / jnp.maximum(denom[assignment], 1e-12)
+
+
+def global_round(cluster_models, data_sizes, assignment, k, num_clients):
+    """Stage 2 from stage-1 outputs: data-size-weighted ground-station
+    aggregation of the (K, ...) cluster models, broadcast to every
+    client."""
+    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+    dk = one_hot.T @ data_sizes.astype(jnp.float32)               # (K,)
+    g = global_aggregate(cluster_models, dk)
+    return broadcast_global(g, num_clients)

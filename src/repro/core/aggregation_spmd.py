@@ -1,27 +1,96 @@
-"""Explicit SPMD form of FedHC's two-stage aggregation.
+"""SPMD form of FedHC's two-stage aggregation.
 
-Inside ``shard_map`` over the client mesh axes, stage 1 is a *grouped*
-weighted all-reduce (``psum(..., axis_index_groups=clusters)``) — only
-intra-cluster links move data, matching the paper's satellite-cluster
-aggregation.  Stage 2 is the ground-station aggregation: one representative
-(the cluster PS) per cluster contributes its cluster model, weighted by the
-cluster's data size, to a full all-reduce.
+:func:`hierarchical_round_sharded` is the **merged** formulation the
+mesh-aware round engine uses: the same one-hot / segment-matmul math as
+the pytree oracle (`core/aggregation.py` — literally the same functions),
+with a traced ``do_global`` branch and ``with_sharding_constraint`` pins
+that keep the leading clients dim sharded over the client mesh axes.
+Because the cluster assignment enters as *data* (a ``(C,)`` array, not
+program structure), dynamic re-clustering needs no recompile, and XLA
+lowers the segment matmuls to grouped collectives under the hood — this
+reconciles the old split between the dynamic single-device path and the
+static grouped-psum path.  :func:`make_spmd_aggregator` is a thin wrapper
+over it (static cluster groups are converted to an assignment array).
 
-The cluster layout is *static* (it comes from host-side k-means over
-satellite positions via ``clustering.balanced_clusters``); re-clustering
-therefore recompiles — one compile per constellation epoch, amortized over
-thousands of steps.
+:func:`hierarchical_agg_shard` — the hand-written
+``psum(axis_index_groups=clusters)`` body — is retained *only* for the
+static-layout transformer train step (`launch/steps.py`), which runs
+inside ``shard_map`` where the global-view formulation is unavailable.
+Its semantics are pinned against the oracle in
+``tests/test_aggregation_spmd.py``.
 """
 from __future__ import annotations
 
-import functools
-from typing import Sequence, Tuple, Union
+from typing import Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding
 from jax.sharding import PartitionSpec as P
 
+from repro.core import aggregation as agg
+
 AxisNames = Union[str, Tuple[str, ...]]
+
+
+def hierarchical_round_sharded(stack, losses, data_sizes, assignment, k,
+                               do_global, *, loss_weighted: bool = True,
+                               participating=None, use_pallas: bool = False,
+                               shardings=None):
+    """One FedHC aggregation round, sharding-compatible.
+
+    Identical math to :func:`repro.core.aggregation.hierarchical_round`
+    (it *is* that function), but:
+
+    * ``do_global`` may be a traced bool — the stage-2 branch is a
+      ``lax.cond``, so the round scan carries it as data;
+    * ``assignment`` may change between calls (dynamic re-clustering)
+      without recompiling;
+    * ``shardings`` (a pytree of NamedSharding matching ``stack``) pins
+      the result's leading clients dim back onto the client mesh axes —
+      without the pin, the stage-1 gather/broadcast tempts GSPMD into
+      replicating the full client stack on every device.
+
+    Stage 1 (the expensive full-stack cluster aggregation) is hoisted
+    *out* of the branch — both arms of the old formulation computed it
+    identically, and under ``vmap`` (multi-seed sweeps) ``lax.cond``
+    lowers to ``select`` so both arms execute: hoisting halves that
+    duplicated work.  Only the cheap stage-2-vs-broadcast choice
+    branches.
+
+    With ``shardings=None`` this is bit-identical to the single-device
+    path (the constraint is simply not emitted).
+    """
+    num_clients = losses.shape[0]
+    w = agg.cluster_weights(losses, data_sizes, assignment, k,
+                            participating, loss_weighted=loss_weighted)
+    cluster_models = agg.cluster_aggregate(stack, w, assignment, k,
+                                           use_pallas=use_pallas)
+    out = jax.lax.cond(
+        do_global,
+        lambda cm: agg.global_round(cm, data_sizes, assignment, k,
+                                    num_clients),
+        lambda cm: agg.broadcast_clusters(cm, assignment),
+        cluster_models)
+    if shardings is not None:
+        out = jax.lax.with_sharding_constraint(out, shardings)
+    return out
+
+
+def clusters_to_assignment(clusters: Sequence[Sequence[int]],
+                           num_clients: Optional[int] = None) -> jnp.ndarray:
+    """Static cluster groups (tuple of member tuples) -> (C,) assignment."""
+    if num_clients is None:
+        num_clients = sum(len(g) for g in clusters)
+    a = np.full((num_clients,), -1, np.int32)
+    for cid, members in enumerate(clusters):
+        for m in members:
+            a[m] = cid
+    if (a < 0).any():
+        missing = np.nonzero(a < 0)[0].tolist()
+        raise ValueError(f"clients {missing} appear in no cluster group")
+    return jnp.asarray(a)
 
 
 def _axis_index(axes: AxisNames):
@@ -92,24 +161,31 @@ def make_spmd_aggregator(mesh, client_axes: AxisNames,
 
     param_specs: pytree of PartitionSpec for the *stacked* params (leading
     clients dim sharded over ``client_axes``).
+
+    Thin wrapper over :func:`hierarchical_round_sharded`: the static
+    cluster groups become an assignment array, and the sharding pins come
+    from ``param_specs`` — same formulation as the round engine, same
+    oracle semantics (``inv_loss`` is Eq. 12's 1/L_i, exactly the weights
+    the old grouped-psum body consumed).  ``client_axes`` documents the
+    layout and is validated against the mesh (the pins themselves come
+    from ``param_specs``).
     """
-    from jax.experimental.shard_map import shard_map
+    axes = ((client_axes,) if isinstance(client_axes, str)
+            else tuple(client_axes))
+    missing = [a for a in axes if a not in mesh.axis_names]
+    if missing:
+        raise ValueError(f"client_axes {missing} not in mesh axes "
+                         f"{tuple(mesh.axis_names)}")
+    assignment = clusters_to_assignment(clusters)
+    k = len(clusters)
+    shardings = jax.tree_util.tree_map(
+        lambda s: NamedSharding(mesh, s), param_specs,
+        is_leaf=lambda x: isinstance(x, P))
 
-    axes_tuple = (client_axes,) if isinstance(client_axes, str) else client_axes
-    scalar_spec = P(client_axes)
+    def fn(stack, inv_loss, data_size, do_global):
+        losses = 1.0 / jnp.maximum(inv_loss.astype(jnp.float32), 1e-12)
+        return hierarchical_round_sharded(
+            stack, losses, data_size, assignment, k, do_global,
+            loss_weighted=True, shardings=shardings)
 
-    def body(stack, inv_loss, data_size, do_global):
-        # inside shard_map the leading clients dim is locally 1
-        local = jax.tree_util.tree_map(lambda x: x[0], stack)
-        out = hierarchical_agg_shard(
-            local, inv_loss[0], data_size[0], do_global,
-            axes=client_axes, clusters=clusters)
-        return jax.tree_util.tree_map(lambda x: x[None], out)
-
-    fn = shard_map(body, mesh=mesh,
-                   in_specs=(param_specs, scalar_spec, scalar_spec, P()),
-                   out_specs=param_specs,
-                   check_rep=False)  # psum(axis_index_groups) has no
-    #                                  replication rule; semantics verified
-    #                                  against the pytree oracle in tests
     return fn

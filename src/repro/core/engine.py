@@ -29,7 +29,24 @@ full run is ``jax.lax.scan(round_step, state0, jnp.arange(rounds))``:
   reachability to the cluster PS, uploads cost hop-by-hop route time, and
   a due stage-2 aggregation that finds no contact window sets the carried
   ``pending_global`` flag and retries every subsequent round until a
-  window opens (FedSpace-style deferral), all without host syncs.
+  window opens (FedSpace-style deferral), all without host syncs;
+* **paper-scale SPMD** (``mesh=`` on ``setup``/``simulate``/``run``): the
+  whole round scan runs as one mesh-aware program.  ``setup`` places the
+  client-stacked params with ``NamedSharding`` from
+  `sharding/rules.tree_param_specs(client_stacked=True)` and the
+  per-client ``SimData`` arrays (``client_idx``/``data_sizes``/``freqs``)
+  on the client axes, so ``_local_train``'s vmap over clients
+  parallelizes across devices; the aggregation goes through the merged
+  `core/aggregation_spmd.hierarchical_round_sharded` formulation (the
+  one-hot segment-matmul oracle math + sharding pins, so dynamic
+  re-clustering stays a data change — no recompile, no replication); the
+  contact-plan rows are sharded over the client axes too, so the
+  per-round gathers never force a replicated (N, N) copy.  With
+  ``mesh=None`` (the default) no constraint ops are emitted and the
+  trajectory stays bit-compatible with the pre-mesh engine
+  (``tests/golden/engine_always.json``).  Client counts must divide the
+  client-axis size (``launch/mesh.validate_client_sharding`` raises
+  otherwise).
 
 One-time setup (synthetic data, model init, initial clustering + PS
 selection) runs eagerly on the host, exactly like the legacy loop: it is
@@ -46,7 +63,10 @@ returns the raw per-round arrays on device.  ``run_many_seeds(cfg, seeds)``
 stacks per-seed setups and ``vmap``s the round scan, so a multi-seed sweep
 is a single compiled call (note: under ``vmap``, ``lax.cond`` lowers to
 ``select``, so per-seed branches both execute; the win is batching across
-the sweep, not branch skipping).
+the sweep, not branch skipping).  ``run``/``simulate``/``setup`` accept
+``mesh=``/``client_axes=`` for the sharded paper-scale path, and
+``cfg.use_pallas_kernels`` routes the scan hot path (k-means assignment,
+stage-1 weighted aggregation) through the Pallas kernels.
 """
 from __future__ import annotations
 
@@ -57,18 +77,23 @@ from typing import Any, Dict, NamedTuple, Optional, Sequence
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import NamedSharding
+from jax.sharding import PartitionSpec as P
 
 from repro.core import aggregation as agg
+from repro.core import aggregation_spmd as agg_spmd
 from repro.core import clustering as cl
 from repro.core import maml as maml_lib
 from repro.core import strategies as strat_lib
 from repro.core.fedhc import FLRunConfig, _local_train, _meta_update_clusters
 from repro.data.synthetic import client_batches, dirichlet_partition, make_split
+from repro.launch import mesh as mesh_lib
 from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
 from repro.orbits import contact as contact_lib
 from repro.orbits import cost as cost_lib
 from repro.orbits.constellation import Constellation, ground_station_position
 from repro.orbits.links import LinkParams
+from repro.sharding import rules as shard_rules
 
 
 class RoundState(NamedTuple):
@@ -137,17 +162,74 @@ def _plan_for(cfg: FLRunConfig,
         _constellation_for(cfg.num_clients), LinkParams(),
         dt_s=cfg.contact_dt_s,
         min_elevation_deg=cfg.gs_min_elevation_deg,
-        max_range_km=cfg.isl_max_range_km, max_hops=cfg.isl_max_hops)
+        max_range_km=cfg.isl_max_range_km, max_hops=cfg.isl_max_hops,
+        storage_dtype=jnp.dtype(cfg.contact_dtype))
+
+
+def _resolve_client_axes(mesh, client_axes):
+    """Placement: which mesh axes carry the client dim.  ``None`` means
+    the whole mesh (the FL model is tiny, so every axis is a client
+    axis unless the caller says otherwise)."""
+    if mesh is None:
+        return None
+    if client_axes is None:
+        return tuple(mesh.axis_names)
+    if isinstance(client_axes, str):
+        return (client_axes,)
+    return tuple(client_axes)
+
+
+def _place(cfg: FLRunConfig, strategy: strat_lib.Strategy,
+           state0: RoundState, data: SimData, mesh,
+           caxes) -> tuple[RoundState, SimData]:
+    """Lay the experiment out on a mesh: the client-stacked params and the
+    per-client SimData arrays shard their leading dim over the client
+    axes; everything else (data pool, clustering state, contact-plan
+    sample axis) is replicated.  Contact-plan *rows* shard over the
+    client axes too, so the per-round lookup gathers stay sharded instead
+    of pulling a replicated (N, N) slice onto every device."""
+    repl = NamedSharding(mesh, P())
+    if strategy.shardable:
+        mesh_lib.validate_client_sharding(mesh, caxes, cfg.num_clients)
+        cvec = NamedSharding(
+            mesh, shard_rules.client_spec(mesh, caxes, cfg.num_clients))
+        pspecs = shard_rules.tree_param_specs(
+            state0.params, mesh, client_axes=caxes, client_stacked=True)
+        param_sh = shard_rules.tree_shardings(pspecs, mesh)
+    else:
+        cvec = repl
+        param_sh = jax.tree_util.tree_map(lambda _: repl, state0.params)
+
+    state_sh = jax.tree_util.tree_map(lambda _: repl, state0)
+    state_sh = state_sh._replace(params=param_sh)
+
+    plan_sh = None
+    if data.plan is not None:
+        row = (shard_rules.client_spec(mesh, caxes, cfg.num_clients)
+               if strategy.shardable else P())
+        row_sh = NamedSharding(mesh, P(None, *row))
+        plan_sh = contact_lib.ContactPlan(
+            times=repl, gs_visible=row_sh, gs_dist_km=row_sh,
+            isl_tpb=row_sh)
+    data_sh = SimData(images=repl, labels=repl, test_x=repl, test_y=repl,
+                      client_idx=cvec, data_sizes=cvec, freqs=cvec,
+                      r_kmeans=repl, plan=plan_sh)
+    return jax.device_put(state0, state_sh), jax.device_put(data, data_sh)
 
 
 def setup(cfg: FLRunConfig, seed: Optional[int] = None,
-          contact_plan: Optional[contact_lib.ContactPlan] = None
-          ) -> tuple[RoundState, SimData]:
+          contact_plan: Optional[contact_lib.ContactPlan] = None,
+          mesh=None, client_axes=None) -> tuple[RoundState, SimData]:
     """One-time experiment setup (host side, same RNG stream layout as the
     legacy loop): synthetic data, model init, strategy-pluggable initial
     clustering, PS selection.  ``contact_plan`` lets multi-seed sweeps
     share one prebuilt plan (it is seed-independent) instead of paying
-    the O(T * N^3) build per seed."""
+    the O(T * N^3) build per seed.
+
+    ``mesh`` (with optional ``client_axes``, default: every mesh axis)
+    lays the experiment out for sharded execution — see :func:`_place`.
+    The RNG streams and values are identical either way; only the device
+    placement differs."""
     strategy = strat_lib.get(cfg.method)
     ds = cfg.dataset
     k = 1 if strategy.centralized else cfg.num_clusters
@@ -188,13 +270,26 @@ def setup(cfg: FLRunConfig, seed: Optional[int] = None,
             else _plan_for(cfg, strategy))
     data = SimData(images, labels, test_x, test_y, client_idx, data_sizes,
                    freqs, r_kmeans, plan)
+    if mesh is not None:
+        state0, data = _place(cfg, strategy, state0, data, mesh,
+                              _resolve_client_axes(mesh, client_axes))
     return state0, data
 
 
-@functools.lru_cache(maxsize=32)
-def _scan_fn(cfg: FLRunConfig):
+def _scan_fn(cfg: FLRunConfig, mesh=None, client_axes=None):
     """Build (and cache) the jitted ``(state0, data) -> (state, outputs)``
-    round scan for a config.  ``FLRunConfig`` is frozen, hence hashable."""
+    round scan for a config.  ``FLRunConfig`` is frozen, hence hashable;
+    ``mesh`` (hashable too) selects the sharded program variant — with
+    ``mesh=None`` no sharding constraint ops are emitted, keeping the
+    single-device program identical to the pre-mesh engine.  Thin
+    canonicalizing wrapper so ``_scan_fn(cfg)`` and
+    ``_scan_fn(cfg, None, None)`` share one cache entry (one compile)."""
+    return _scan_fn_cached(cfg, mesh, _resolve_client_axes(mesh,
+                                                           client_axes))
+
+
+@functools.lru_cache(maxsize=32)
+def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
     strategy = strat_lib.get(cfg.method)
     ds = cfg.dataset
     k = 1 if strategy.centralized else cfg.num_clusters
@@ -202,9 +297,25 @@ def _scan_fn(cfg: FLRunConfig):
     constellation = _constellation_for(cfg.num_clients)
     lp, cp = LinkParams(), cost_lib.ComputeParams()
     sample_bits = ds.img ** 2 * ds.channels * 32.0
+    use_pallas = cfg.use_pallas_kernels
+    if use_pallas:
+        # lazy: the default path must not require jax.experimental.pallas
+        from repro.kernels import ops as kernel_ops
 
-    hier = functools.partial(agg.hierarchical_round, k=k,
-                             loss_weighted=strategy.loss_weighted)
+    caxes = _resolve_client_axes(mesh, client_axes)
+    sharded = mesh is not None and strategy.shardable
+    if sharded:
+        mesh_lib.validate_client_sharding(mesh, caxes, cfg.num_clients)
+        cvec_sharding = NamedSharding(
+            mesh, shard_rules.client_spec(mesh, caxes, cfg.num_clients))
+
+        def shard_clients(x):
+            """Pin a (C, ...) per-client array's leading dim to the
+            client mesh axes."""
+            return jax.lax.with_sharding_constraint(x, cvec_sharding)
+    else:
+        def shard_clients(x):
+            return x
 
     def run_scan(state0: RoundState, data: SimData):
         model_bits = sum(
@@ -212,6 +323,18 @@ def _scan_fn(cfg: FLRunConfig):
         if not strategy.centralized:
             model_bits //= cfg.num_clients
         model_bits *= 32.0
+
+        if sharded:
+            pspecs = shard_rules.tree_param_specs(
+                state0.params, mesh, client_axes=caxes, client_stacked=True)
+            param_shardings = shard_rules.tree_shardings(pspecs, mesh)
+        else:
+            param_shardings = None
+
+        def shard_params(tree):
+            if param_shardings is None:
+                return tree
+            return jax.lax.with_sharding_constraint(tree, param_shardings)
 
         def finish(state, rnd, params, assignment, centroids, ps_index,
                    reclustered, loss_val, t_r, e_r, pending_next,
@@ -243,10 +366,15 @@ def _scan_fn(cfg: FLRunConfig):
             imgs, labs = client_batches(data.images, data.labels,
                                         data.client_idx, r_rnd,
                                         cfg.batch_size)
+            imgs, labs = shard_clients(imgs), shard_clients(labs)
 
             # geometry drift: a satellite whose nearest centroid changed
             # has "left" its cluster (Alg. 1) — drives the dropout rate.
-            nearest = cl.assign(positions, state.centroids)
+            if use_pallas:
+                nearest, _ = kernel_ops.kmeans_assign(positions,
+                                                      state.centroids)
+            else:
+                nearest = cl.assign(positions, state.centroids)
             in_region = nearest == state.assignment
 
             if strategy.visibility_gated:
@@ -285,13 +413,15 @@ def _scan_fn(cfg: FLRunConfig):
 
             params, losses = _local_train(state.params, imgs, labs,
                                           lr=cfg.lr, steps=cfg.local_steps)
-            params = jax.lax.cond(
-                do_global,
-                lambda p: hier(p, losses, data.data_sizes, state.assignment,
-                               participating=participating, do_global=True),
-                lambda p: hier(p, losses, data.data_sizes, state.assignment,
-                               participating=participating, do_global=False),
-                params)
+            params = shard_params(params)
+            losses = shard_clients(losses)
+            # the merged aggregation formulation: oracle math + sharding
+            # pins, traced do_global, dynamic assignment (no recompile)
+            params = agg_spmd.hierarchical_round_sharded(
+                params, losses, data.data_sizes, state.assignment, k,
+                do_global, loss_weighted=strategy.loss_weighted,
+                participating=participating, use_pallas=use_pallas,
+                shardings=param_shardings)
             loss_val = jnp.mean(losses)
 
             if strategy.visibility_gated:
@@ -327,7 +457,7 @@ def _scan_fn(cfg: FLRunConfig):
                     cluster_models = agg.cluster_aggregate(
                         params,
                         agg.loss_weights(losses, new_assignment, k),
-                        new_assignment, k)
+                        new_assignment, k, use_pallas=use_pallas)
                     if strategy.maml:
                         cluster_models = _meta_update_clusters(
                             cluster_models, new_assignment, imgs, labs,
@@ -356,6 +486,7 @@ def _scan_fn(cfg: FLRunConfig):
                  reclustered) = jax.lax.cond(
                     fire, do_recluster, no_recluster,
                     (params, assignment, centroids, ps_index))
+                params = shard_params(params)
 
             return finish(
                 state, rnd, params, assignment, centroids, ps_index,
@@ -413,18 +544,22 @@ def _scan_fn(cfg: FLRunConfig):
 # --------------------------------------------------------------------------
 
 
-def simulate(cfg: FLRunConfig, seed: Optional[int] = None):
+def simulate(cfg: FLRunConfig, seed: Optional[int] = None, *,
+             mesh=None, client_axes=None):
     """One compiled run -> (final RoundState, stacked RoundOutput) on
-    device.  No host syncs happen inside the round loop."""
-    state0, data = setup(cfg, seed)
-    return _scan_fn(cfg)(state0, data)
+    device.  No host syncs happen inside the round loop.  ``mesh`` runs
+    the sharded program variant (client axis over the mesh)."""
+    client_axes = _resolve_client_axes(mesh, client_axes)  # hashable key
+    state0, data = setup(cfg, seed, mesh=mesh, client_axes=client_axes)
+    return _scan_fn(cfg, mesh, client_axes)(state0, data)
 
 
-def run(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
+def run(cfg: FLRunConfig, verbose: bool = False, *,
+        mesh=None, client_axes=None) -> Dict[str, list]:
     """Drop-in replacement for the legacy ``run_fl`` loop: same history
     dict (entries at every ``eval_every``-th round plus the last), produced
     by a single scan-compiled call and ONE device->host transfer."""
-    final_state, outs = simulate(cfg)
+    final_state, outs = simulate(cfg, mesh=mesh, client_axes=client_axes)
     outs = jax.device_get(outs)                     # the one transfer
 
     idx = np.nonzero(np.asarray(outs.evaluated))[0]

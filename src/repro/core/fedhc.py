@@ -80,6 +80,17 @@ class FLRunConfig:
     gs_min_elevation_deg: float = 10.0    # ground-station elevation mask
     isl_max_range_km: float = 8000.0      # ISL terminal slant-range limit
     isl_max_hops: int = 8                 # route relaxation hop bound
+    # ---- paper-scale execution (engine-only knobs; the legacy loop -----
+    # ---- ignores both) -------------------------------------------------
+    contact_dtype: str = "float32"        # ContactPlan isl_tpb storage:
+    #                                       "float32" | "bfloat16" (halves
+    #                                       the (T,N,N) route table at
+    #                                       N=800; upcast at lookup)
+    use_pallas_kernels: bool = False      # route the scan hot path through
+    #                                       the Pallas kernels (kmeans
+    #                                       assignment + stage-1 weighted
+    #                                       aggregation; interpreted
+    #                                       off-TPU)
 
 
 # --------------------------------------------------------------------------

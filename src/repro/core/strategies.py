@@ -162,6 +162,14 @@ class Strategy:
         return self.connectivity != "always"
 
     @property
+    def shardable(self) -> bool:
+        """The engine can shard this method's client axis over a mesh.
+        Centralized methods carry ONE server model (no client-stacked
+        params), so there is nothing to shard — under a mesh they run
+        replicated."""
+        return not self.centralized
+
+    @property
     def isl_global(self) -> bool:
         """Stage 2 is the on-board inter-PS ISL consensus (no GS)."""
         return self.connectivity == "isl"

@@ -11,6 +11,9 @@ import jax
 from repro.kernels.flash_attention import flash_attention as _flash
 from repro.kernels.kmeans import kmeans_assign as _kmeans
 from repro.kernels.weighted_agg import weighted_agg as _wagg
+from repro.kernels.weighted_agg import weighted_agg_multi as _wagg_multi
+from repro.kernels.weighted_agg import \
+    weighted_agg_multi_tree as _wagg_multi_tree
 from repro.kernels.weighted_agg import weighted_agg_tree as _wagg_tree
 
 
@@ -26,6 +29,16 @@ def weighted_agg(stack, weights, interpret=None):
 def weighted_agg_tree(tree, weights, interpret=None):
     return _wagg_tree(tree, weights,
                       interpret=_default_interpret() if interpret is None else interpret)
+
+
+def weighted_agg_multi(stack, weights, interpret=None):
+    return _wagg_multi(stack, weights,
+                       interpret=_default_interpret() if interpret is None else interpret)
+
+
+def weighted_agg_multi_tree(tree, weights, interpret=None):
+    return _wagg_multi_tree(tree, weights,
+                            interpret=_default_interpret() if interpret is None else interpret)
 
 
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,

@@ -17,6 +17,15 @@ def weighted_agg_ref(stack: jnp.ndarray, weights: jnp.ndarray) -> jnp.ndarray:
                       ).astype(stack.dtype)
 
 
+def weighted_agg_multi_ref(stack: jnp.ndarray,
+                           weights: jnp.ndarray) -> jnp.ndarray:
+    """Multi-cluster stage-1 aggregation in one contraction.
+
+    stack (C, P), weights (C, K) -> (K, P) = sum_c w_ck * stack_c."""
+    return jnp.einsum("cp,ck->kp", stack.astype(jnp.float32),
+                      weights.astype(jnp.float32)).astype(stack.dtype)
+
+
 def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0,
                         softcap: float = 0.0) -> jnp.ndarray:
     """q (B,Hq,Sq,D), k/v (B,Hkv,Sk,D) -> (B,Hq,Sq,D).  GQA by head fold.

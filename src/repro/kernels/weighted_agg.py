@@ -61,3 +61,56 @@ def weighted_agg_tree(tree, weights, *, interpret: bool = True):
         return weighted_agg(flat, weights, interpret=interpret
                             ).reshape(x.shape[1:])
     return jax.tree_util.tree_map(one, tree)
+
+
+def _multi_kernel(w_ref, x_ref, o_ref):
+    # x_ref: (C, BLOCK_P); w_ref: (C, K); o_ref: (K, BLOCK_P)
+    x = x_ref[...].astype(jnp.float32)
+    w = w_ref[...].astype(jnp.float32)
+    o_ref[...] = jax.lax.dot_general(
+        w, x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "block_p"))
+def weighted_agg_multi(stack: jnp.ndarray, weights: jnp.ndarray, *,
+                       interpret: bool = True, block_p: int = BLOCK_P
+                       ) -> jnp.ndarray:
+    """stack (C, P), weights (C, K) -> (K, P): all K weighted reductions
+    in ONE pass over the stack (out[k] = sum_c weights[c, k] * stack[c]).
+
+    This is FedHC's stage-1 per-cluster aggregation with the one-hot
+    cluster mask folded into the weight matrix: each (C, BLOCK_P) tile
+    is read from HBM once and contracted against the VMEM-resident
+    (C, K) weights on the MXU — K separate ``weighted_agg`` calls would
+    re-stream the whole client stack K times."""
+    C, P = stack.shape
+    K = weights.shape[1]
+    pad = (-P) % block_p
+    if pad:
+        stack = jnp.pad(stack, ((0, 0), (0, pad)))
+    Pp = P + pad
+    out = pl.pallas_call(
+        _multi_kernel,
+        grid=(Pp // block_p,),
+        in_specs=[
+            pl.BlockSpec((C, K), lambda i: (0, 0)),
+            pl.BlockSpec((C, block_p), lambda i: (0, i)),
+        ],
+        out_specs=pl.BlockSpec((K, block_p), lambda i: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((K, Pp), stack.dtype),
+        interpret=interpret,
+    )(weights, stack)
+    return out[:, :P]
+
+
+def weighted_agg_multi_tree(tree, weights, *, interpret: bool = True):
+    """Leaf-wise multi-cluster aggregation: (C, ...) pytree + (C, K)
+    weights -> (K, ...) pytree of cluster models."""
+    k = weights.shape[1]
+
+    def one(x):
+        flat = x.reshape(x.shape[0], -1)
+        return weighted_agg_multi(flat, weights, interpret=interpret
+                                  ).reshape((k,) + x.shape[1:])
+    return jax.tree_util.tree_map(one, tree)

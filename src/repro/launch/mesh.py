@@ -1,7 +1,10 @@
-"""Production mesh construction.
+"""Mesh construction: production pods and the FL client mesh.
 
 Single pod: (data=16, model=16) = 256 chips (TPU v5e pod).
 Multi-pod:  (pod=2, data=16, model=16) = 512 chips.
+Client mesh: a 1-D ("clients",) mesh over all local devices — the
+paper-scale FL layout where the engine shards the leading client dim of
+the stacked model over devices (`core/engine.py` with ``mesh=``).
 
 Defined as functions (never module-level constants) so importing this module
 never touches jax device state — the dry-run must set
@@ -9,42 +12,92 @@ XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
 """
 from __future__ import annotations
 
+from typing import Optional
+
 import jax
 
 
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+def _make_mesh(shape, axes):
+    """`jax.make_mesh` across jax versions: 0.5+ takes ``axis_types``
+    (explicit Auto), 0.4.x does not (everything is auto)."""
+    try:
+        types = (jax.sharding.AxisType.Auto,) * len(axes)
+    except AttributeError:            # jax 0.4.x: AxisType does not exist
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=types)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
 
 
 def make_test_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh for CPU tests (requires >= prod(shape) host devices)."""
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(axes)))
+    return _make_mesh(shape, axes)
+
+
+def make_client_mesh(num_devices: Optional[int] = None, axis: str = "clients"):
+    """1-D client mesh: one shard of the stacked client-model axis per
+    device.  Uses every local device unless ``num_devices`` caps it."""
+    n = len(jax.devices()) if num_devices is None else num_devices
+    return _make_mesh((n,), (axis,))
 
 
 def mesh_axes(mesh) -> tuple:
     return tuple(mesh.axis_names)
 
 
-def client_axes_for(mesh, client_axis: str):
-    """Mesh axes over which FL clients are laid out."""
+def client_axis_size(mesh, client_axes) -> int:
+    """Total number of shards the client dim is split into (delegates to
+    `sharding/rules.axis_size` — one source of truth for the
+    divisibility semantics)."""
+    from repro.sharding.rules import axis_size
+    return axis_size(mesh, client_axes or None)
+
+
+def validate_client_sharding(mesh, client_axes, num_clients: int) -> None:
+    """Raise unless ``num_clients`` divides evenly over the client mesh
+    axes.  GSPMD would silently pad the ragged shard (wasting memory and
+    skewing per-shard collectives); an explicit error is the only safe
+    behavior."""
+    size = client_axis_size(mesh, client_axes)
+    if num_clients % size:
+        raise ValueError(
+            f"num_clients={num_clients} is not divisible by the client "
+            f"mesh axis size {size} (axes {client_axes!r}, mesh "
+            f"{dict(mesh.shape)}): the client stack would be padded and "
+            f"mis-sharded. Pick num_clients as a multiple of {size} or "
+            f"shrink the client axes.")
+
+
+def client_axes_for(mesh, client_axis: str, num_clients: Optional[int] = None):
+    """Mesh axes over which FL clients are laid out.  Pass ``num_clients``
+    to validate divisibility (raises instead of silently mis-sharding)."""
     names = mesh.axis_names
     if client_axis == "pod":
-        return ("pod",) if "pod" in names else None   # None => 1 client
-    # client per data index, across pods when present
-    return tuple(a for a in ("pod", "data") if a in names)
+        axes = ("pod",) if "pod" in names else None   # None => 1 client
+    else:
+        # client per data index, across pods when present
+        axes = tuple(a for a in ("pod", "data") if a in names)
+    if num_clients is not None:
+        if axes:
+            validate_client_sharding(mesh, axes, num_clients)
+        elif num_clients != 1:
+            raise ValueError(
+                f"mesh {dict(mesh.shape)} has no client axes for "
+                f"client_axis={client_axis!r} (it lays out exactly 1 "
+                f"client), but num_clients={num_clients} was requested")
+    return axes
 
 
-def num_clients_for(mesh, client_axis: str) -> int:
-    axes = client_axes_for(mesh, client_axis)
+def num_clients_for(mesh, client_axis: str,
+                    num_clients: Optional[int] = None) -> int:
+    """Number of clients the mesh lays out (one per client-axis index).
+    Pass ``num_clients`` to additionally validate that an externally
+    chosen client count divides the axis size."""
+    axes = client_axes_for(mesh, client_axis, num_clients)
     if not axes:
         return 1
-    n = 1
-    for a in axes:
-        n *= mesh.shape[a]
-    return n
+    return client_axis_size(mesh, axes)

@@ -75,12 +75,18 @@ _BASE_RULES = {
 # experts dim; handled by ndim mismatch logic below.
 
 
-def _axis_size(mesh: Mesh, axes) -> int:
+def axis_size(mesh: Mesh, axes) -> int:
+    """Product of the given mesh-axis sizes (1 for None; str or tuple).
+    The single source of truth for divisibility checks here and in
+    `launch/mesh.validate_client_sharding`."""
     if axes is None:
         return 1
     if isinstance(axes, str):
         axes = (axes,)
     return int(np.prod([mesh.shape[a] for a in axes]))
+
+
+_axis_size = axis_size      # internal alias (pre-existing callers)
 
 
 def _resolve(role: Optional[str], tp_axes, fsdp_axes):
@@ -157,3 +163,14 @@ def tree_shardings(specs, mesh: Mesh):
 def batch_spec(batch_axes) -> P:
     """Spec for (global_batch, ...) data arrays."""
     return P(batch_axes)
+
+
+def client_spec(mesh: Mesh, client_axes, num_clients: int) -> P:
+    """Spec for a per-client array with a leading (num_clients, ...) dim:
+    sharded over ``client_axes`` when the count divides the axis size,
+    replicated otherwise (same fallback policy as ``spec_for_param``)."""
+    if client_axes is None:
+        return P()
+    if num_clients % _axis_size(mesh, client_axes) != 0:
+        return P()
+    return P(client_axes)

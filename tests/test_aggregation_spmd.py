@@ -1,5 +1,8 @@
-"""SPMD grouped-psum aggregation == pytree oracle (run in a subprocess with
-8 fake devices so the main pytest process keeps a single CPU device)."""
+"""SPMD aggregation == pytree oracle (run in a subprocess with 8 fake
+devices so the main pytest process keeps a single CPU device): the
+make_spmd_aggregator wrapper (static cluster groups) and the merged
+dynamic-assignment formulation `hierarchical_round_sharded` that the
+mesh-aware engine uses."""
 import json
 import subprocess
 import sys
@@ -49,3 +52,62 @@ def test_spmd_matches_pytree_oracle():
     errs = json.loads(res.stdout.strip().splitlines()[-1])
     assert errs["False"] < 1e-5, errs
     assert errs["True"] < 1e-5, errs
+
+
+DYNAMIC_SCRIPT = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import jax, jax.numpy as jnp, numpy as np, json
+    from jax.sharding import PartitionSpec as P, NamedSharding
+    from repro.core import aggregation as agg
+    from repro.core.aggregation_spmd import hierarchical_round_sharded
+
+    mesh = jax.make_mesh((8,), ("data",))
+    C, K = 16, 3
+    rng = jax.random.PRNGKey(0)
+    shardings = {"a": NamedSharding(mesh, P("data")),
+                 "b": NamedSharding(mesh, P("data"))}
+    stack = jax.device_put(
+        {"a": jax.random.normal(rng, (C, 4, 3)),
+         "b": jax.random.normal(jax.random.fold_in(rng, 1), (C, 5))},
+        shardings)
+    losses = jax.random.uniform(jax.random.fold_in(rng, 2), (C,),
+                                minval=0.2, maxval=3.0)
+    sizes = jnp.ones((C,)) * 2.0
+
+    fn = jax.jit(lambda s, l, d, a, g: hierarchical_round_sharded(
+        s, l, d, a, K, g, loss_weighted=True, shardings=shardings))
+
+    out = {"recompiles_ok": True}
+    # dynamic re-clustering: the assignment is DATA — two different
+    # cluster layouts (and both do_global branches) through ONE compiled
+    # program, all matching the pytree oracle
+    layouts = [jnp.asarray([i % K for i in range(C)], jnp.int32),
+               jnp.asarray([i // 6 for i in range(C)], jnp.int32)]
+    for li, assignment in enumerate(layouts):
+        for do_global in (False, True):
+            got = fn(stack, losses, sizes, assignment,
+                     jnp.asarray(do_global))
+            want = agg.hierarchical_round(stack, losses, sizes, assignment,
+                                          K, do_global=do_global)
+            err = max(float(jnp.max(jnp.abs(got[k] - want[k])))
+                      for k in stack)
+            out[f"{li}_{do_global}"] = err
+            # the client dim must STAY sharded through the aggregation
+            assert got["a"].sharding.spec[0] == "data", got["a"].sharding
+    out["compiles"] = fn._cache_size()
+    print(json.dumps(out))
+""")
+
+
+def test_merged_formulation_dynamic_assignment_sharded():
+    """The engine's merged aggregation path: traced do_global, dynamic
+    assignment (no recompile between cluster layouts), client dim pinned
+    sharded, oracle-exact results."""
+    res = subprocess.run([sys.executable, "-c", DYNAMIC_SCRIPT],
+                         capture_output=True, text=True, timeout=600)
+    assert res.returncode == 0, res.stderr[-3000:]
+    rec = json.loads(res.stdout.strip().splitlines()[-1])
+    for key in ("0_False", "0_True", "1_False", "1_True"):
+        assert rec[key] < 1e-5, rec
+    assert rec["compiles"] == 1, rec      # one program, four calls

@@ -106,6 +106,39 @@ def test_contact_windows_cover_visibility():
     assert vis.all(axis=0).sum() == 0
 
 
+def test_bf16_storage_halves_route_table_and_upcasts_at_lookup():
+    """bf16 isl_tpb storage: half the bytes, identical reachability
+    (bf16 keeps f32's exponent range so inf/finite never flips), f32
+    lookups within bf16 rounding of the f32-stored plan."""
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    f32 = C.build_contact_plan(c, LinkParams(), dt_s=300.0)
+    bf16 = C.build_contact_plan(c, LinkParams(), dt_s=300.0,
+                                storage_dtype=jnp.bfloat16)
+    assert f32.isl_tpb.dtype == jnp.float32
+    assert bf16.isl_tpb.dtype == jnp.bfloat16
+    assert bf16.isl_tpb.nbytes * 2 == f32.isl_tpb.nbytes
+    # reachability mask is bit-identical
+    np.testing.assert_array_equal(np.isfinite(np.asarray(bf16.isl_tpb,
+                                                         np.float32)),
+                                  np.isfinite(np.asarray(f32.isl_tpb)))
+    for t in (0.0, 900.0):
+        _, _, tpb_f = C.lookup(f32, jnp.float32(t))
+        _, _, tpb_b = C.lookup(bf16, jnp.float32(t))
+        assert tpb_b.dtype == jnp.float32        # upcast at lookup
+        a, b = np.asarray(tpb_f), np.asarray(tpb_b)
+        finite = np.isfinite(a)
+        np.testing.assert_allclose(b[finite], a[finite], rtol=5e-3)
+
+
+def test_f32_storage_lookup_is_unchanged():
+    """The default f32 path must return the stored rows verbatim (the
+    connectivity goldens pin on this)."""
+    _, plan = _plan(dt_s=300.0)
+    _, _, tpb = C.lookup(plan, jnp.float32(600.0))
+    np.testing.assert_array_equal(np.asarray(tpb),
+                                  np.asarray(plan.isl_tpb[2]))
+
+
 def test_gs_blackout_and_open_masks():
     """Elevation mask extremes: +89.9 deg => no contacts anywhere in the
     plan; -90 deg => every satellite is always 'visible'."""

@@ -93,6 +93,68 @@ def test_flash_block_shape_independence():
                                atol=2e-5)
 
 
+@pytest.mark.parametrize("C,P,K", [(4, 100, 2), (16, 3000, 5), (12, 2048, 8)])
+def test_weighted_agg_multi_sweep(C, P, K):
+    """One-pass (C,K)-weight aggregation == K independent single-weight
+    reductions == the einsum oracle."""
+    rng = jax.random.PRNGKey(C + P + K)
+    s = jax.random.normal(rng, (C, P))
+    w = jax.random.uniform(jax.random.fold_in(rng, 1), (C, K))
+    got = ops.weighted_agg_multi(s, w, interpret=True)
+    want = ref.weighted_agg_multi_ref(s, w)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-5, atol=2e-5)
+    for k in range(K):
+        one = ops.weighted_agg(s, w[:, k], interpret=True)
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(one),
+                                   rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------- pallas-routed FedHC aggregation
+
+def test_cluster_aggregate_pallas_matches_jnp():
+    """Stage-1 per-cluster aggregation through weighted_agg_tree equals
+    the one-hot-matmul jnp path (the engine's `use_pallas_kernels` hot
+    path parity, at the aggregation level)."""
+    from repro.core import aggregation as agg
+    rng = jax.random.PRNGKey(3)
+    C, K = 12, 3
+    stack = {"w": jax.random.normal(rng, (C, 5, 4)),
+             "b": jax.random.normal(jax.random.fold_in(rng, 1), (C, 7))}
+    weights = jax.random.uniform(jax.random.fold_in(rng, 2), (C,))
+    assignment = jax.random.randint(jax.random.fold_in(rng, 3), (C,), 0, K)
+    want = agg.cluster_aggregate(stack, weights, assignment, K)
+    got = agg.cluster_aggregate(stack, weights, assignment, K,
+                                use_pallas=True)
+    for k in stack:
+        assert got[k].shape == want[k].shape
+        np.testing.assert_allclose(np.asarray(got[k]), np.asarray(want[k]),
+                                   rtol=2e-5, atol=2e-5)
+
+
+def test_engine_pallas_flag_trajectory_parity():
+    """`use_pallas_kernels=True` routes the scan hot path (k-means
+    assignment + stage-1 weighted aggregation, incl. the re-cluster
+    branch) through the Pallas kernels; the trajectory must match the
+    jnp reference path (kernels/ref.py semantics) within float noise —
+    including firing re-clustering on the same rounds."""
+    from repro.core import engine
+    from repro.core.fedhc import FLRunConfig
+    base = dict(method="fedhc", num_clients=16, num_clusters=3, rounds=8,
+                rounds_per_global=4, eval_every=4, samples_per_client=32,
+                local_steps=1, eval_size=128, batch_size=16,
+                dropout_threshold=0.2, round_minutes=4.0)
+    h_ref = engine.run(FLRunConfig(**base))
+    h_pal = engine.run(FLRunConfig(**base, use_pallas_kernels=True))
+    assert h_pal["reclusters"] == h_ref["reclusters"] >= 1
+    np.testing.assert_allclose(h_pal["time_s"], h_ref["time_s"], rtol=1e-5)
+    np.testing.assert_allclose(h_pal["energy_j"], h_ref["energy_j"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(h_pal["loss"], h_ref["loss"], rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_allclose(h_pal["acc"], h_ref["acc"], atol=5e-3)
+
+
 # ------------------------------------------------------------ kmeans assign
 
 @pytest.mark.parametrize("N,D,K", [(100, 3, 4), (513, 10, 7), (64, 128, 16),

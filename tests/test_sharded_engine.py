@@ -1,0 +1,139 @@
+"""Mesh-aware SPMD engine: client-axis sharding at paper scale.
+
+The main pytest process keeps a single CPU device, so every sharded case
+runs in a subprocess with XLA_FLAGS=--xla_force_host_platform_device_count=8
+(same pattern as test_aggregation_spmd.py).  Covered:
+
+* a tiny sharded fedhc run matches the single-device trajectory (the
+  acceptance parity pin), with sharding asserts on the placed state;
+* an N=800 (paper-scale) fedhc run completes under the 8-device mesh with
+  the client axis actually sharded 100-per-device;
+* a sharded visibility-gated (fedspace) run with bf16 contact-plan
+  storage matches its own single-device trajectory;
+* non-divisible client counts raise instead of silently mis-sharding.
+"""
+import json
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+PRELUDE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    import json
+    import jax
+    import numpy as np
+    from repro.core import engine
+    from repro.core.fedhc import FLRunConfig
+    from repro.launch.mesh import make_client_mesh
+    mesh = make_client_mesh()
+    assert len(jax.devices()) == 8, jax.devices()
+""")
+
+
+def _run(script: str, timeout: int = 600) -> str:
+    res = subprocess.run([sys.executable, "-c", PRELUDE + textwrap.dedent(script)],
+                         capture_output=True, text=True, timeout=timeout)
+    assert res.returncode == 0, res.stderr[-4000:]
+    return res.stdout
+
+
+def test_sharded_matches_single_device_trajectory():
+    """Acceptance pin: the sharded tiny-config run reproduces the
+    single-device trajectory within 1e-5, and the placed client stack is
+    genuinely sharded (C/8 rows per device)."""
+    out = _run("""
+        cfg = FLRunConfig(method="fedhc", num_clients=32, num_clusters=3,
+                          rounds=8, rounds_per_global=4, eval_every=4,
+                          samples_per_client=32, local_steps=1,
+                          eval_size=128, batch_size=16)
+        state0, data = engine.setup(cfg, mesh=mesh)
+        leaf = jax.tree_util.tree_leaves(state0.params)[0]
+        assert leaf.sharding.spec[0] == ("clients",), leaf.sharding.spec
+        shapes = {s.data.shape for s in leaf.addressable_shards}
+        assert all(sh[0] == cfg.num_clients // 8 for sh in shapes), shapes
+        assert data.client_idx.sharding.spec[0] == ("clients",)
+        assert data.freqs.sharding.spec[0] == ("clients",)
+        h_sharded = engine.run(cfg, mesh=mesh)
+        h_single = engine.run(cfg)
+        np.testing.assert_allclose(h_sharded["time_s"], h_single["time_s"],
+                                   rtol=1e-5)
+        np.testing.assert_allclose(h_sharded["energy_j"],
+                                   h_single["energy_j"], rtol=1e-5)
+        np.testing.assert_allclose(h_sharded["loss"], h_single["loss"],
+                                   rtol=1e-4, atol=1e-5)
+        np.testing.assert_allclose(h_sharded["acc"], h_single["acc"],
+                                   atol=5e-3)
+        assert h_sharded["reclusters"] == h_single["reclusters"]
+        print(json.dumps({"ok": True,
+                          "max_loss_delta": float(np.max(np.abs(
+                              np.asarray(h_sharded["loss"])
+                              - np.asarray(h_single["loss"]))))}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"] and rec["max_loss_delta"] < 1e-4
+
+
+def test_paper_scale_800_sats_shards_client_axis():
+    """The ROADMAP scale step: N=800 fedhc completes under the forced
+    8-device host mesh with 100 clients per device."""
+    out = _run("""
+        cfg = FLRunConfig(method="fedhc", num_clients=800, num_clusters=8,
+                          rounds=2, rounds_per_global=2, eval_every=2,
+                          samples_per_client=8, local_steps=1,
+                          eval_size=64, batch_size=8)
+        state0, data = engine.setup(cfg, mesh=mesh)
+        for leaf in jax.tree_util.tree_leaves(state0.params):
+            assert leaf.sharding.spec[0] == ("clients",), leaf.sharding.spec
+            assert leaf.addressable_shards[0].data.shape[0] == 100
+        h = engine.run(cfg, mesh=mesh)
+        assert np.all(np.isfinite(h["time_s"]))
+        assert np.all(np.isfinite(h["energy_j"]))
+        assert np.all(np.isfinite(h["acc"]))
+        print(json.dumps({"ok": True, "acc": h["acc"]}))
+    """)
+    assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+def test_sharded_fedspace_bf16_plan():
+    """Visibility-gated + sharded: the contact-plan rows shard over the
+    client axis (no replicated (N,N) gather) with bf16 route storage, and
+    the trajectory matches the single-device bf16 run."""
+    out = _run("""
+        cfg = FLRunConfig(method="fedspace", num_clients=32, num_clusters=3,
+                          rounds=8, rounds_per_global=4, eval_every=4,
+                          samples_per_client=32, local_steps=1,
+                          eval_size=128, batch_size=16,
+                          contact_dtype="bfloat16")
+        state0, data = engine.setup(cfg, mesh=mesh)
+        assert str(data.plan.isl_tpb.dtype) == "bfloat16"
+        assert data.plan.isl_tpb.sharding.spec[1] == ("clients",), \\
+            data.plan.isl_tpb.sharding.spec
+        h = engine.run(cfg, mesh=mesh)
+        h1 = engine.run(cfg)
+        np.testing.assert_allclose(h["time_s"], h1["time_s"], rtol=1e-5)
+        np.testing.assert_allclose(h["loss"], h1["loss"], rtol=1e-4,
+                                   atol=1e-5)
+        assert h["global_rounds"] == h1["global_rounds"] >= 1
+        print(json.dumps({"ok": True}))
+    """)
+    assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+def test_indivisible_client_count_raises():
+    """30 clients over 8 devices must raise the divisibility error, not
+    silently pad/mis-shard."""
+    out = _run("""
+        cfg = FLRunConfig(method="fedhc", num_clients=30, num_clusters=3,
+                          rounds=2, samples_per_client=8, eval_size=32)
+        try:
+            engine.setup(cfg, mesh=mesh)
+        except ValueError as e:
+            assert "divisible" in str(e), e
+            print(json.dumps({"ok": True, "msg": str(e)[:80]}))
+        else:
+            print(json.dumps({"ok": False}))
+    """)
+    assert json.loads(out.strip().splitlines()[-1])["ok"]

@@ -11,9 +11,11 @@ from repro.sharding import rules
 
 
 class FakeMesh:
-    """Duck-typed mesh: rules only reads .shape."""
+    """Duck-typed mesh: rules reads .shape; launch/mesh layout helpers
+    additionally read .axis_names."""
     def __init__(self, shape_dict):
         self.shape = shape_dict
+        self.axis_names = tuple(shape_dict)
 
 
 MESH = FakeMesh({"data": 16, "model": 16})
@@ -59,6 +61,76 @@ def test_moe_expert_weights_per_expert_tp():
 def test_norm_scale_replicated():
     s = rules.spec_for_param(("norm1", "scale"), (2304,), MESH)
     assert s == P()
+
+
+# ---- client-stacked specs at paper scale (N=800 over client meshes) ------
+
+
+@pytest.mark.parametrize("ndev", [4, 8, 16])
+def test_client_stacked_paper_scale_divides(ndev):
+    """800 satellites shard evenly over 4/8/16-device client meshes; the
+    (unmatched-name) LeNet-style inner dims stay replicated."""
+    mesh = FakeMesh({"clients": ndev})
+    s = rules.spec_for_param(("f1", "w"), (800, 256, 120), mesh,
+                             client_axes=("clients",), client_stacked=True)
+    assert s == P(("clients",))          # trailing replicated dims trimmed
+    b = rules.spec_for_param(("c1", "b"), (800, 6), mesh,
+                             client_axes=("clients",), client_stacked=True)
+    assert b == P(("clients",))
+
+
+@pytest.mark.parametrize("ndev", [4, 8, 16])
+def test_client_stacked_paper_scale_with_tp(ndev):
+    """Client stacking composes with tensor parallelism: leading clients
+    dim over the client axis, d_ff over the model axis."""
+    mesh = FakeMesh({"clients": ndev, "model": 4})
+    s = rules.spec_for_param(("mlp", "w_gate"), (800, 2304, 9216), mesh,
+                             tp_axes="model", client_axes=("clients",),
+                             client_stacked=True)
+    assert s == P(("clients",), None, "model")
+
+
+def test_client_stacked_divisibility_fallback():
+    """800 % 3 != 0: the clients dim falls back to replicated (GSPMD
+    would pad; we prefer the explicit fallback) while other dims keep
+    their placement."""
+    mesh = FakeMesh({"clients": 3, "model": 4})
+    s = rules.spec_for_param(("mlp", "w_gate"), (800, 2304, 9216), mesh,
+                             tp_axes="model", client_axes=("clients",),
+                             client_stacked=True)
+    assert s == P(None, None, "model")
+
+
+@pytest.mark.parametrize("ndev,n,want", [
+    (4, 800, P(("clients",))), (8, 800, P(("clients",))),
+    (16, 800, P(("clients",))), (3, 800, P()), (16, 100, P()),
+])
+def test_client_spec_vector_arrays(ndev, n, want):
+    """client_spec places (C,)-leading SimData arrays (client_idx,
+    data_sizes, freqs) with the same divisibility fallback."""
+    mesh = FakeMesh({"clients": ndev})
+    assert rules.client_spec(mesh, ("clients",), n) == want
+    assert rules.client_spec(mesh, None, n) == P()   # no client axes
+
+
+def test_client_layout_validation():
+    """launch/mesh: non-divisible client counts raise a clear error (no
+    silent mis-sharding), including the no-client-axes degenerate case."""
+    from repro.launch import mesh as mesh_lib
+    m = FakeMesh({"data": 16, "model": 16})
+    # divisible: fine
+    assert mesh_lib.client_axes_for(m, "data", num_clients=64) == ("data",)
+    assert mesh_lib.num_clients_for(m, "data", num_clients=32) == 16
+    with pytest.raises(ValueError, match="divisible"):
+        mesh_lib.client_axes_for(m, "data", num_clients=100)
+    with pytest.raises(ValueError, match="divisible"):
+        mesh_lib.validate_client_sharding(m, ("data",), 30)
+    # mesh without the requested client axis lays out exactly 1 client
+    with pytest.raises(ValueError, match="no client axes"):
+        mesh_lib.client_axes_for(m, "pod", num_clients=800)
+    assert mesh_lib.num_clients_for(m, "pod", num_clients=1) == 1
+    # legacy call sites (no num_clients) keep working unvalidated
+    assert mesh_lib.client_axes_for(m, "pod") is None
 
 
 def test_tree_specs_walk():
