@@ -1,0 +1,169 @@
+"""Async-vs-sync engine benchmark: FedBuff-style buffered aggregation
+against synchronous FedHC at matched training work, N in {64, 256, 800}
+(the paper's largest constellation).
+
+Per constellation size it runs sync ``fedhc`` for R rounds and the async
+methods (``fedhc-async``, ``fedbuff``) for ``R * N / cohort`` events —
+the same total number of client-rounds — and reports:
+
+    sim_time_s      simulated wall-clock to finish the work (the async
+                    win: events advance past the cohort, not past the
+                    slowest member of every cluster)
+    sim_energy_j    simulated energy (identical per-client round costs;
+                    differences come from participation and stage-2)
+    acc_vs_time     [(sim_time_s, accuracy)] curve at eval events
+    host_s          host wall-clock of the compiled run (compile excluded)
+    flushes / mean_staleness   async buffer telemetry
+
+    PYTHONPATH=src python -m benchmarks.async_bench [--fast] [--smoke]
+
+    --fast   drop the N=800 point (CI-sized)
+    --smoke  instead of the sweep: tiny sharded fedbuff end-to-end on a
+             client mesh over all local devices + the sync-equivalence
+             check — the CI forced-8-device job runs this
+
+Results land in results/async_bench.json.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+import numpy as np
+
+SYNC_METHOD = "fedhc"
+ASYNC_METHODS = ("fedhc-async", "fedbuff")
+
+
+def _cfg(method: str, n: int, rounds: int, cohort: int = 0, **kw):
+    from repro.core.fedhc import FLRunConfig
+    base = dict(method=method, num_clients=n,
+                num_clusters=max(4, n // 100), rounds=rounds,
+                rounds_per_global=2, samples_per_client=16, local_steps=1,
+                batch_size=16, eval_size=256,
+                async_cohort=cohort, async_buffer=cohort)
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+def _run_once(cfg) -> dict:
+    from repro.core import engine
+    t0 = time.time()
+    h = engine.run(cfg)                     # compile + run
+    compile_s = time.time() - t0
+    t0 = time.time()
+    h = engine.run(cfg)
+    host_s = time.time() - t0
+    out = {
+        "rounds": cfg.rounds,
+        "compile_s": round(compile_s, 2), "host_s": round(host_s, 2),
+        "sim_time_s": round(h["time_s"][-1], 1),
+        "sim_energy_j": round(h["energy_j"][-1], 1),
+        "final_acc": round(h["acc"][-1], 4),
+        "acc_vs_time": [[round(t, 1), round(a, 4)]
+                        for t, a in zip(h["time_s"], h["acc"])],
+    }
+    if "flushes" in h:
+        out["flushes"] = h["flushes"]
+        out["mean_staleness"] = round(h["mean_staleness"], 3)
+    return out
+
+
+def bench_n(n: int, rounds_sync: int = 4) -> dict:
+    cohort = max(8, n // 8)
+    events = rounds_sync * n // cohort      # equal total client-rounds
+    point = {"num_clients": n, "cohort": cohort}
+    sync = _run_once(_cfg(SYNC_METHOD, n, rounds_sync,
+                          eval_every=max(1, rounds_sync // 2)))
+    point[SYNC_METHOD] = sync
+    for method in ASYNC_METHODS:
+        r = _run_once(_cfg(method, n, events, cohort=cohort,
+                           eval_every=max(1, events // 2)))
+        r["sim_speedup_vs_sync"] = round(
+            sync["sim_time_s"] / max(r["sim_time_s"], 1e-9), 3)
+        point[method] = r
+        print(f"[async] N={n:4d} {method:12s}: {r['rounds']:4d} events "
+              f"(cohort {cohort:3d}) | sim T={r['sim_time_s']:9.1f}s "
+              f"(sync {sync['sim_time_s']:9.1f}s, "
+              f"x{r['sim_speedup_vs_sync']:.2f}) | "
+              f"E={r['sim_energy_j']:10.1f}J | acc {r['final_acc']:.3f} | "
+              f"flushes {r['flushes']:3d} | "
+              f"stale {r['mean_staleness']:.2f}")
+    return point
+
+
+def smoke() -> dict:
+    """CI: tiny sharded fedbuff end-to-end on a client mesh over every
+    local device, plus the zero-staleness/full-buffer sync-equivalence
+    check (the bit-level pin lives in tests/test_async_engine.py)."""
+    import dataclasses
+
+    import jax
+    from repro.core import engine
+    from repro.core import strategies as strat_lib
+    from repro.launch.mesh import make_client_mesh
+
+    ndev = len(jax.devices())
+    assert ndev > 1, ("async smoke needs >1 device; set XLA_FLAGS="
+                      "--xla_force_host_platform_device_count=8")
+    mesh = make_client_mesh()
+    n = 4 * ndev
+    cfg = _cfg("fedbuff", n, rounds=8, cohort=n // 4, eval_every=4,
+               num_clusters=1)
+    h_sharded = engine.run(cfg, mesh=mesh)
+    h_single = engine.run(cfg)
+    np.testing.assert_allclose(h_sharded["time_s"], h_single["time_s"],
+                               rtol=1e-5)
+    np.testing.assert_allclose(h_sharded["loss"], h_single["loss"],
+                               rtol=1e-4, atol=1e-5)
+    assert h_sharded["flushes"] == h_single["flushes"] >= 1
+    print(f"[async] sharded fedbuff smoke OK over {ndev} devices "
+          f"(flushes {h_sharded['flushes']}, acc {h_sharded['acc']})")
+
+    # sync-equivalence: full cohort + full buffer + constant decay.
+    # Under the forced multi-device topology XLA fuses the two engines'
+    # programs slightly differently (+-1 ulp), so this smoke pins at a
+    # tight allclose; the strict BIT-FOR-BIT pin runs in the tier-1
+    # single-device environment (tests/test_async_engine.py).
+    name = "fedhc-async-synctwin-smoke"
+    if name not in strat_lib.names():
+        strat_lib.register(dataclasses.replace(
+            strat_lib.get("fedhc-async"), name=name, aggregation="sync"))
+    cfg_a = _cfg("fedhc-async", 16, rounds=8, cohort=16, eval_every=4,
+                 num_clusters=3, staleness="constant")
+    cfg_s = _cfg(name, 16, rounds=8, eval_every=4, num_clusters=3)
+    h_a, h_s = engine.run(cfg_a), engine.run(cfg_s)
+    np.testing.assert_allclose(h_a["loss"], h_s["loss"], rtol=1e-5)
+    np.testing.assert_allclose(h_a["time_s"], h_s["time_s"], rtol=1e-5)
+    np.testing.assert_allclose(h_a["energy_j"], h_s["energy_j"], rtol=1e-5)
+    assert h_a["global_rounds"] == h_s["global_rounds"] >= 1
+    print("[async] full-cohort zero-staleness == sync: equivalence OK")
+    return {"devices": ndev, "flushes": h_sharded["flushes"]}
+
+
+def main(fast: bool = False,
+         out_path: str = "results/async_bench.json") -> dict:
+    sizes = (64, 256) if fast else (64, 256, 800)
+    points = [bench_n(n) for n in sizes]
+    result = {"sync_method": SYNC_METHOD, "async_methods": ASYNC_METHODS,
+              "points": points}
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=2)
+    return result
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="drop the N=800 point")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny sharded async run + sync-equivalence "
+                         "(needs >1 device)")
+    args = ap.parse_args()
+    if args.smoke:
+        smoke()
+    else:
+        main(fast=args.fast)

@@ -8,7 +8,10 @@ Sections:
   [engine]       scan-compiled engine vs legacy host-loop wall-clock speedup
   [connectivity] contact-plan build cost + fedspace / isl-onboard vs fedhc
   [scale]        constellation-size sweep (N up to the paper's 800 sats)
-                 + contact-plan f32-vs-bf16 storage tradeoff
+                 + contact-plan f32-vs-bf16 + cluster-sliced storage
+  [async]        buffered async (fedbuff / fedhc-async) vs sync FedHC at
+                 matched training work: simulated time, energy,
+                 accuracy-vs-time
   [fig3]         seed-averaged accuracy vs rounds (methods x K x datasets)
   [table1]       time/energy to target accuracy (Table I)
   [roofline]     three-term roofline per (arch x shape) from the dry-run
@@ -53,6 +56,10 @@ def main() -> None:
     section("scale")
     from benchmarks import scale_bench
     scale_bench.main(fast=args.fast)
+
+    section("async")
+    from benchmarks import async_bench
+    async_bench.main(fast=args.fast)
 
     section("fig3-accuracy")
     from benchmarks import fig3_accuracy, table1_time_energy

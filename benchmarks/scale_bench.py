@@ -92,6 +92,37 @@ def bench_plan_dtype(num_planes: int = 4, sats_per_plane: int = 8,
     }
 
 
+def bench_plan_slices(num_planes: int = 4, sats_per_plane: int = 8,
+                      dt_s: float = 120.0, k: int = 4) -> dict:
+    """Cluster-sliced route storage ((T,N)+(T,K,N) vs (T,N,N)): measured
+    on a small constellation and extrapolated to the ROADMAP target
+    N=800 / K=8 / dt=10 s, where the full f32 table is ~1.5 GB and the
+    sliced one must land under ~50 MB."""
+    import jax.numpy as jnp
+    from repro.orbits import contact as contact_lib
+    from repro.orbits.constellation import Constellation
+    from repro.orbits.links import LinkParams
+
+    c = Constellation(num_planes=num_planes, sats_per_plane=sats_per_plane)
+    n = c.num_sats
+    assignment = jnp.asarray(np.arange(n) % k, jnp.int32)
+    ps_index = jnp.asarray(np.arange(k) * (n // k), jnp.int32)
+    full = contact_lib.build_contact_plan(c, LinkParams(), dt_s=dt_s)
+    sliced = contact_lib.build_contact_plan(
+        c, LinkParams(), dt_s=dt_s, cluster_slices=(assignment, ps_index))
+    t800 = int(round(c.period_s / 10.0))     # dt=10 s over one period
+    k800 = 8
+    return {
+        "num_sats": n, "k": k, "samples": int(full.times.shape[0]),
+        "routes_mb_full": round(full.isl_tpb.nbytes / 1e6, 3),
+        "routes_mb_sliced": round(
+            (sliced.tpb_to_ps.nbytes + sliced.ps_rows.nbytes) / 1e6, 3),
+        "n800_dt10_mb_full_f32": round(t800 * 800 * 800 * 4 / 1e6, 1),
+        "n800_dt10_mb_sliced_f32": round(
+            (t800 * 800 + t800 * k800 * 800) * 4 / 1e6, 1),
+    }
+
+
 def sharded_smoke() -> dict:
     """Tiny sharded fedhc end-to-end on a client mesh over every local
     device (the CI forced-multi-device job); asserts the client axis is
@@ -145,7 +176,14 @@ def main(fast: bool = False,
           f"bf16 (max rel err {plan['max_rel_err_bf16']:.2e}, reachability "
           f"identical: {plan['reachability_identical']}); at N=800/dt=60s: "
           f"{plan['n800_dt60_gb_f32']} GB -> {plan['n800_dt60_gb_bf16']} GB")
-    result = {"engine": points, "plan_dtype": plan}
+    slices = bench_plan_slices()
+    print(f"[scale] cluster-sliced routes ({slices['num_sats']} sats, "
+          f"K={slices['k']}): {slices['routes_mb_full']} MB full -> "
+          f"{slices['routes_mb_sliced']} MB sliced; at N=800/K=8/dt=10s: "
+          f"{slices['n800_dt10_mb_full_f32']} MB full f32 -> "
+          f"{slices['n800_dt10_mb_sliced_f32']} MB sliced "
+          f"(cfg.contact_slices=True)")
+    result = {"engine": points, "plan_dtype": plan, "plan_slices": slices}
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(result, f, indent=2)

@@ -1,8 +1,10 @@
 """Orbital mechanics + clustering demo: watch the constellation drift, the
 dropout rate build up (Alg. 1 line 15), re-clustering restore short
-intra-cluster links — and the time-varying connectivity substrate: the
+intra-cluster links — the time-varying connectivity substrate: the
 Earth-occluded ISL graph, multi-hop routes to each cluster PS, and the
-ground-station contact windows that gate fedspace-style global rounds.
+ground-station contact windows that gate fedspace-style global rounds —
+and the asynchronous buffered engine: staleness-decay schedules, virtual
+per-client clocks, and the event cadence vs a synchronous round.
 
     PYTHONPATH=src python examples/constellation_demo.py
 """
@@ -11,6 +13,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import clustering as cl
+from repro.core import staleness as stale_lib
 from repro.orbits import contact as contact_lib
 from repro.orbits import topology
 from repro.orbits.constellation import Constellation, ground_station_position, visible
@@ -82,6 +85,40 @@ def main():
     print(f"sat {best_sat} contact windows: {pretty}")
     print("fedspace defers any global round that lands outside these "
           "windows (engine carries a pending-aggregation flag)")
+
+    # ---- asynchronous buffered aggregation -------------------------------
+    print("\n--- async buffered engine (fedbuff / fedhc-async) ---")
+    print("staleness-decay weight s(tau) by schedule "
+          "(tau = server versions the update is behind):")
+    taus = jnp.arange(0.0, 9.0)
+    for name in stale_lib.names():
+        w = np.asarray(stale_lib.decay(name, taus, a=0.5, b=4.0))
+        row = " ".join(f"{x:.2f}" for x in w)
+        print(f"  {name:10s} tau=0..8: {row}")
+
+    from repro.core import engine
+    from repro.core.fedhc import FLRunConfig
+    common = dict(num_clients=16, num_clusters=4, samples_per_client=32,
+                  local_steps=1, batch_size=16, eval_size=128,
+                  rounds_per_global=4)
+    # 6 sync rounds == 24 async events at cohort 4: same total work
+    h_sync = engine.run(FLRunConfig(method="fedhc", rounds=6, eval_every=6,
+                                    **common))
+    h_async = engine.run(FLRunConfig(method="fedhc-async", rounds=24,
+                                     eval_every=24, async_cohort=4,
+                                     async_buffer=4,
+                                     staleness="polynomial", **common))
+    print(f"matched work (96 client-rounds): sync fedhc finishes at "
+          f"T={h_sync['time_s'][-1]:.0f}s; fedhc-async at "
+          f"T={h_async['time_s'][-1]:.0f}s "
+          f"(x{h_sync['time_s'][-1] / h_async['time_s'][-1]:.2f} faster "
+          f"simulated clock)")
+    print(f"async telemetry: {h_async['flushes']} buffer flushes, "
+          f"{h_async['global_rounds']} buffered stage-2 rounds, mean "
+          f"staleness {h_async['mean_staleness']:.2f} versions")
+    print("the event engine pops the earliest-deadline cohort per step: "
+          "fast satellites lap slow ones instead of idling on the "
+          "cluster barrier; stale updates land with decayed weight")
 
 
 if __name__ == "__main__":

@@ -78,6 +78,49 @@ def hierarchical_round_sharded(stack, losses, data_sizes, assignment, k,
     return out
 
 
+def buffered_flush_sharded(contrib_stack, losses, data_sizes, assignment, k,
+                           contrib_w, flush, cluster_params, *,
+                           loss_weighted: bool = True,
+                           server_lr: float = 1.0,
+                           use_pallas: bool = False):
+    """FedBuff-style buffered flush with the same one-hot segment-matmul
+    math (and sharding behavior) as :func:`hierarchical_round_sharded`.
+
+    contrib_stack: (C, ...) pytree — each client's last *contributed*
+        (trained) model; rows with ``contrib_w == 0`` are empty buffer
+        slots and drop out of the weighting.
+    contrib_w: (C,) f32 staleness-decayed contribution weights (0 = no
+        pending update).  They enter :func:`agg.cluster_weights` through
+        the ``participating`` multiplier, so the final per-cluster
+        weights are ``base_weight_i * s(tau_i)``, cluster-normalized —
+        with ``s == 1`` and every slot full this is bit-identical to the
+        synchronous stage-1 weighting.
+    flush: (K,) bool — which cluster buffers reached their fill
+        threshold this event; the others keep ``cluster_params``.
+    server_lr: flush mixing rate.  1.0 *replaces* the cluster model with
+        the buffered aggregate (checked statically so the sync-equivalent
+        configuration stays bit-exact); otherwise
+        ``old + server_lr * (agg - old)``.
+
+    Returns the new (K, ...) cluster-model pytree.  The heavy reduction
+    is the same segment matmul over the (possibly client-sharded) C dim,
+    so under a mesh XLA lowers it to grouped collectives; the (K, ...)
+    output is replicated (K is tiny)."""
+    w = agg.cluster_weights(losses, data_sizes, assignment, k,
+                            participating=contrib_w,
+                            loss_weighted=loss_weighted)
+    new_models = agg.cluster_aggregate(contrib_stack, w, assignment, k,
+                                       use_pallas=use_pallas)
+    if server_lr != 1.0:
+        new_models = jax.tree_util.tree_map(
+            lambda new, old: old + server_lr * (new - old),
+            new_models, cluster_params)
+    return jax.tree_util.tree_map(
+        lambda new, old: jnp.where(
+            flush.reshape((-1,) + (1,) * (new.ndim - 1)), new, old),
+        new_models, cluster_params)
+
+
 def clusters_to_assignment(clusters: Sequence[Sequence[int]],
                            num_clients: Optional[int] = None) -> jnp.ndarray:
     """Static cluster groups (tuple of member tuples) -> (C,) assignment."""

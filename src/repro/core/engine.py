@@ -151,19 +151,26 @@ def _constellation_for(num_clients: int) -> Constellation:
                          sats_per_plane=num_clients // planes)
 
 
-def _plan_for(cfg: FLRunConfig,
-              strategy: strat_lib.Strategy
-              ) -> Optional[contact_lib.ContactPlan]:
-    """Build the (seed-independent) contact plan a config needs — None
-    for always-up strategies."""
+def _plan_for(cfg: FLRunConfig, strategy: strat_lib.Strategy,
+              cluster_slices=None):
+    """Build the contact plan a config needs — None for always-up
+    strategies.  Without ``cluster_slices`` the plan is seed-independent
+    (shareable across a sweep); passing ``(assignment, ps_index)`` builds
+    the cluster-sliced storage form instead (`orbits/contact.py`), which
+    is seed-*dependent* and only valid for a static cluster layout."""
     if not strategy.visibility_gated:
         return None
+    if cluster_slices is not None and strategy.reclusters:
+        raise ValueError("contact_slices=True requires a static cluster "
+                         "layout (recluster='never'): a sliced plan only "
+                         "stores routes to the build-time PS set")
     return contact_lib.build_contact_plan(
         _constellation_for(cfg.num_clients), LinkParams(),
         dt_s=cfg.contact_dt_s,
         min_elevation_deg=cfg.gs_min_elevation_deg,
         max_range_km=cfg.isl_max_range_km, max_hops=cfg.isl_max_hops,
-        storage_dtype=jnp.dtype(cfg.contact_dtype))
+        storage_dtype=jnp.dtype(cfg.contact_dtype),
+        cluster_slices=cluster_slices)
 
 
 def _resolve_client_axes(mesh, client_axes):
@@ -179,41 +186,57 @@ def _resolve_client_axes(mesh, client_axes):
     return tuple(client_axes)
 
 
+def _data_shardings(cfg: FLRunConfig, strategy: strat_lib.Strategy,
+                    data: SimData, mesh, caxes) -> SimData:
+    """Sharding pytree for :class:`SimData`: per-client arrays shard their
+    leading dim over the client axes, contact-plan *rows* shard over the
+    client axes too (so lookup gathers never pull a replicated (N, N)
+    slice), everything else is replicated.  Shared with the async engine
+    (`core/async_engine.py`), whose SimData layout is identical."""
+    repl = NamedSharding(mesh, P())
+    if strategy.shardable:
+        cvec = NamedSharding(
+            mesh, shard_rules.client_spec(mesh, caxes, cfg.num_clients))
+    else:
+        cvec = repl
+    plan_sh = None
+    if data.plan is not None:
+        row = (shard_rules.client_spec(mesh, caxes, cfg.num_clients)
+               if strategy.shardable else P())
+        row_sh = NamedSharding(mesh, P(None, *row))
+        if isinstance(data.plan, contact_lib.ClusterContactPlan):
+            plan_sh = contact_lib.ClusterContactPlan(
+                times=repl, gs_visible=row_sh, gs_dist_km=row_sh,
+                tpb_to_ps=row_sh,
+                ps_rows=NamedSharding(mesh, P(None, None, *row)))
+        else:
+            plan_sh = contact_lib.ContactPlan(
+                times=repl, gs_visible=row_sh, gs_dist_km=row_sh,
+                isl_tpb=row_sh)
+    return SimData(images=repl, labels=repl, test_x=repl, test_y=repl,
+                   client_idx=cvec, data_sizes=cvec, freqs=cvec,
+                   r_kmeans=repl, plan=plan_sh)
+
+
 def _place(cfg: FLRunConfig, strategy: strat_lib.Strategy,
            state0: RoundState, data: SimData, mesh,
            caxes) -> tuple[RoundState, SimData]:
     """Lay the experiment out on a mesh: the client-stacked params and the
     per-client SimData arrays shard their leading dim over the client
     axes; everything else (data pool, clustering state, contact-plan
-    sample axis) is replicated.  Contact-plan *rows* shard over the
-    client axes too, so the per-round lookup gathers stay sharded instead
-    of pulling a replicated (N, N) slice onto every device."""
+    sample axis) is replicated."""
     repl = NamedSharding(mesh, P())
     if strategy.shardable:
         mesh_lib.validate_client_sharding(mesh, caxes, cfg.num_clients)
-        cvec = NamedSharding(
-            mesh, shard_rules.client_spec(mesh, caxes, cfg.num_clients))
         pspecs = shard_rules.tree_param_specs(
             state0.params, mesh, client_axes=caxes, client_stacked=True)
         param_sh = shard_rules.tree_shardings(pspecs, mesh)
     else:
-        cvec = repl
         param_sh = jax.tree_util.tree_map(lambda _: repl, state0.params)
 
     state_sh = jax.tree_util.tree_map(lambda _: repl, state0)
     state_sh = state_sh._replace(params=param_sh)
-
-    plan_sh = None
-    if data.plan is not None:
-        row = (shard_rules.client_spec(mesh, caxes, cfg.num_clients)
-               if strategy.shardable else P())
-        row_sh = NamedSharding(mesh, P(None, *row))
-        plan_sh = contact_lib.ContactPlan(
-            times=repl, gs_visible=row_sh, gs_dist_km=row_sh,
-            isl_tpb=row_sh)
-    data_sh = SimData(images=repl, labels=repl, test_x=repl, test_y=repl,
-                      client_idx=cvec, data_sizes=cvec, freqs=cvec,
-                      r_kmeans=repl, plan=plan_sh)
+    data_sh = _data_shardings(cfg, strategy, data, mesh, caxes)
     return jax.device_put(state0, state_sh), jax.device_put(data, data_sh)
 
 
@@ -266,8 +289,10 @@ def setup(cfg: FLRunConfig, seed: Optional[int] = None,
                         ps_index0, r_loop, jnp.float32(0.0),
                         jnp.float32(0.0), jnp.int32(0), jnp.bool_(False))
     # one-time eager build; the compiled rounds only gather from it
+    slices = ((assignment0.astype(jnp.int32), ps_index0)
+              if cfg.contact_slices else None)
     plan = (contact_plan if contact_plan is not None
-            else _plan_for(cfg, strategy))
+            else _plan_for(cfg, strategy, cluster_slices=slices))
     data = SimData(images, labels, test_x, test_y, client_idx, data_sizes,
                    freqs, r_kmeans, plan)
     if mesh is not None:
@@ -291,6 +316,11 @@ def _scan_fn(cfg: FLRunConfig, mesh=None, client_axes=None):
 @functools.lru_cache(maxsize=32)
 def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
     strategy = strat_lib.get(cfg.method)
+    if strategy.is_async:
+        raise ValueError(
+            f"{cfg.method!r} uses async-buffered aggregation: its scan "
+            f"lives in repro.core.async_engine (engine.run/simulate "
+            f"route there automatically)")
     ds = cfg.dataset
     k = 1 if strategy.centralized else cfg.num_clusters
     n_total = cfg.num_clients * cfg.samples_per_client
@@ -379,14 +409,22 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
 
             if strategy.visibility_gated:
                 # contact-plan gathers: who can route to whom *right now*
-                gs_vis, gs_dist, tpb = contact_lib.lookup(data.plan,
-                                                          state.t_sim)
-                ps_of_member = state.ps_index[state.assignment]       # (C,)
-                tpb_to_ps = tpb[jnp.arange(cfg.num_clients), ps_of_member]
+                # (a cluster-sliced plan stores member->PS and PS-row
+                # routes directly; a full plan derives the same slices)
+                if isinstance(data.plan, contact_lib.ClusterContactPlan):
+                    gs_vis, gs_dist, tpb_to_ps, ps_rows = \
+                        contact_lib.lookup_sliced(data.plan, state.t_sim)
+                else:
+                    gs_vis, gs_dist, tpb = contact_lib.lookup(data.plan,
+                                                              state.t_sim)
+                    ps_of_member = state.ps_index[state.assignment]   # (C,)
+                    tpb_to_ps = tpb[jnp.arange(cfg.num_clients),
+                                    ps_of_member]
+                    ps_rows = tpb[state.ps_index]                     # (K,C)
                 # a member participates iff a bounded-hop ISL route to its
                 # PS exists (the PS itself always does: tpb diagonal is 0)
                 participating = jnp.isfinite(tpb_to_ps)
-                ps_tpb = tpb[state.ps_index][:, state.ps_index]       # (K,K)
+                ps_tpb = ps_rows[:, state.ps_index]                   # (K,K)
                 if strategy.isl_global:
                     # on-board consensus: needs every PS pair connected
                     window = jnp.all(jnp.isfinite(ps_tpb))
@@ -395,12 +433,12 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                 else:
                     # relay gateway: the GS-visible satellite minimizing
                     # the worst PS route (inf when none is visible)
-                    worst = jnp.max(tpb[state.ps_index, :], axis=0)   # (C,)
+                    worst = jnp.max(ps_rows, axis=0)                  # (C,)
                     score = jnp.where(gs_vis, worst, jnp.inf)
                     gateway = jnp.argmin(score).astype(jnp.int32)
                     window = jnp.isfinite(score[gateway])
                     t_g, e_g = cost_lib.routed_ground_round_costs(
-                        tpb[state.ps_index, gateway], gs_dist[gateway],
+                        ps_rows[:, gateway], gs_dist[gateway],
                         model_bits=model_bits, lp=lp)
                 due = cadence_due | state.pending_global
                 do_global = due & window
@@ -548,7 +586,13 @@ def simulate(cfg: FLRunConfig, seed: Optional[int] = None, *,
              mesh=None, client_axes=None):
     """One compiled run -> (final RoundState, stacked RoundOutput) on
     device.  No host syncs happen inside the round loop.  ``mesh`` runs
-    the sharded program variant (client axis over the mesh)."""
+    the sharded program variant (client axis over the mesh).  Async
+    strategies route to `core/async_engine.simulate` (returning its
+    ``(AsyncState, AsyncOutput)`` types instead)."""
+    if strat_lib.get(cfg.method).is_async:
+        from repro.core import async_engine   # late: it imports this module
+        return async_engine.simulate(cfg, seed, mesh=mesh,
+                                     client_axes=client_axes)
     client_axes = _resolve_client_axes(mesh, client_axes)  # hashable key
     state0, data = setup(cfg, seed, mesh=mesh, client_axes=client_axes)
     return _scan_fn(cfg, mesh, client_axes)(state0, data)
@@ -558,7 +602,13 @@ def run(cfg: FLRunConfig, verbose: bool = False, *,
         mesh=None, client_axes=None) -> Dict[str, list]:
     """Drop-in replacement for the legacy ``run_fl`` loop: same history
     dict (entries at every ``eval_every``-th round plus the last), produced
-    by a single scan-compiled call and ONE device->host transfer."""
+    by a single scan-compiled call and ONE device->host transfer.  Async
+    strategies route to `core/async_engine.run` (same history keys, plus
+    buffer/staleness telemetry)."""
+    if strat_lib.get(cfg.method).is_async:
+        from repro.core import async_engine
+        return async_engine.run(cfg, verbose=verbose, mesh=mesh,
+                                client_axes=client_axes)
     final_state, outs = simulate(cfg, mesh=mesh, client_axes=client_axes)
     outs = jax.device_get(outs)                     # the one transfer
 
@@ -602,8 +652,15 @@ def run_many_seeds(cfg: FLRunConfig,
 
     Returns per-round arrays of shape ``(num_seeds, rounds)`` — mask by
     ``evaluated`` to recover the eval-cadence history — plus per-seed
-    re-cluster totals."""
-    plan = _plan_for(cfg, strat_lib.get(cfg.method))
+    re-cluster totals.  (Sliced contact plans are seed-dependent, so the
+    sweep always shares one *full* plan regardless of
+    ``cfg.contact_slices``.)"""
+    strategy = strat_lib.get(cfg.method)
+    if strategy.is_async:
+        raise NotImplementedError(
+            "run_many_seeds is sync-only for now; vmap the async engine's "
+            "scan directly or loop async_engine.run over seeds")
+    plan = _plan_for(cfg, strategy)
     setups = [setup(cfg, int(s), contact_plan=plan) for s in seeds]
     state0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),
                                     *[s for s, _ in setups])

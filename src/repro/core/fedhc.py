@@ -21,6 +21,12 @@ Methods:
                  global aggregation over the precomputed contact plan.
   isl-onboard  : engine-only — no ground station; inter-cluster consensus
                  over multi-hop ISL routes between cluster PSs.
+  fedbuff      : engine-only — flat single-server buffered async with
+                 staleness-decay weights (event engine, per-client clocks).
+  fedhc-async  : engine-only — per-cluster buffered async stage-1 +
+                 buffered stage-2 across PSs.
+  fedspace-async: engine-only — buffered async gated by the contact plan
+                 at each client's own clock.
 
 ``run_fl`` is now a thin compatibility wrapper over the scan-compiled
 round engine (`core/engine.py`), which executes the whole multi-round
@@ -91,6 +97,28 @@ class FLRunConfig:
     #                                       assignment + stage-1 weighted
     #                                       aggregation; interpreted
     #                                       off-TPU)
+    contact_slices: bool = False          # store only member->PS + PS-row
+    #                                       routes ((T,N)+(T,K,N)) instead
+    #                                       of the full (T,N,N) table;
+    #                                       needs a static cluster layout
+    #                                       (recluster="never") and is
+    #                                       per-seed (run_many_seeds keeps
+    #                                       the full shared plan)
+    # ---- asynchronous buffered aggregation (strategies with ------------
+    # ---- aggregation="async-buffered"; ignored by sync methods) --------
+    async_cohort: int = 0                 # clients popped per event
+    #                                       (0 => num_clients: sync-like)
+    async_buffer: int = 0                 # per-cluster flush threshold
+    #                                       (0 => cohort size; a cluster
+    #                                       smaller than the threshold
+    #                                       flushes when ALL its members
+    #                                       have contributed)
+    staleness: str = "polynomial"         # staleness-decay schedule
+    #                                       (core/staleness.py registry)
+    staleness_a: float = 0.5              # decay exponent / slope
+    staleness_b: float = 4.0              # hinge grace window (versions)
+    server_lr: float = 1.0                # flush mixing rate (1.0 =
+    #                                       replace with the buffered agg)
 
 
 # --------------------------------------------------------------------------

@@ -1,17 +1,23 @@
-"""Visibility-gated aggregation scheduler (paper §II-A: ground stations see
+"""LEGACY host-side visibility gate (paper §II-A: ground stations see
 satellites only inside elevation windows).
 
-Decides, per round, whether the ground-station stage (stage-2) can fire:
-it requires at least one cluster PS visible from a ground station at the
-current orbital time.  Intra-cluster stage-1 is always allowed (ISLs).
+The CANONICAL stage-2 gate is the precomputed contact plan
+(`orbits/contact.py`): the scan engines (`core/engine.py`,
+`core/async_engine.py`) gather ``gs_visible`` rows on device and carry a
+``pending_global`` flag, so the gating decision happens inside the
+compiled program with no host syncs — that path drives every
+connectivity-gated strategy (``fedspace``, ``isl-onboard``, the async
+methods) and is what benchmarks and tests exercise.
 
-The production launcher uses this to set the ``do_global`` flag fed to the
-compiled train step; the FL simulator uses it to time ground aggregation.
-
-The scan engine's connectivity-gated strategies (``fedspace`` /
-``isl-onboard``) use the precomputed-contact-plan generalization of this
-gate instead — `orbits/contact.py` + the ``pending_global`` carry in
-`core/engine.py` — so the decision happens on device with no host syncs.
+:func:`ground_stage_allowed` below is the legacy *host-side* form of the
+same predicate ("is any cluster PS above the elevation mask right
+now?"), kept for the static-layout production launcher
+(`launch/steps.py` consumers), which sets ``do_global`` eagerly between
+compiled steps.  Both gates evaluate the same geometry
+(`orbits/constellation.visible`), and
+``tests/test_scheduler_pipeline.py::test_legacy_gate_agrees_with_contact_plan``
+pins that they agree sample-for-sample on a tiny constellation — if you
+change one, change both.
 """
 from __future__ import annotations
 

@@ -1,0 +1,78 @@
+"""Staleness-decay weighting for asynchronous buffered aggregation.
+
+In the async engine (`core/async_engine.py`) every buffered client update
+carries a staleness ``tau = v_server - v_client``: the number of model
+versions the aggregate advanced between the client *fetching* its base
+model and its update *arriving*.  A staleness schedule maps ``tau`` to a
+multiplicative weight ``s(tau) in (0, 1]`` folded into the client's
+aggregation weight before the per-cluster normalization — stale updates
+still contribute (no work is discarded), they just count for less.
+
+Schedules are an open registry of pure-jnp callables (jit/vmap-safe, so
+the event scan traces through them), keyed by ``FLRunConfig.staleness``:
+
+* ``constant``    — ``s(tau) = 1``: staleness ignored.  With buffer size
+  = cohort size this makes the async engine reproduce the synchronous
+  trajectory (the equivalence the parity tests pin).
+* ``polynomial``  — ``s(tau) = (1 + tau)^(-a)``: FedAsync/FedBuff-style
+  polynomial decay (So et al., arXiv 2202.01267 use the same family for
+  FedSpace's staleness discounting).
+* ``hinge``       — ``s(tau) = 1`` while ``tau <= b``, then
+  ``1 / (1 + a * (tau - b))``: tolerate a grace window of ``b`` versions
+  (natural for LEO, where a satellite can be out of contact for a whole
+  orbital blackout), decay hyperbolically after it.
+
+All schedules must be monotone non-increasing in ``tau`` and equal to 1
+at ``tau = 0`` — pinned by ``tests/test_staleness.py`` property tests.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax.numpy as jnp
+
+# fn(tau_f32, a, b) -> weight in (0, 1]; tau may be any shape
+StalenessFn = Callable[[jnp.ndarray, float, float], jnp.ndarray]
+
+STALENESS_FNS: Dict[str, StalenessFn] = {}
+
+
+def staleness_schedule(name: str) -> Callable[[StalenessFn], StalenessFn]:
+    """Decorator: register a staleness schedule under ``name``."""
+    def deco(fn: StalenessFn) -> StalenessFn:
+        STALENESS_FNS[name] = fn
+        return fn
+    return deco
+
+
+@staleness_schedule("constant")
+def _constant(tau, a, b):
+    """s(tau) = 1 exactly (bitwise: the sync-equivalence parity relies on
+    the weight being the float literal 1.0, since ``1.0 * x == x``)."""
+    return jnp.ones_like(tau)
+
+
+@staleness_schedule("polynomial")
+def _polynomial(tau, a, b):
+    """s(tau) = (1 + tau)^(-a) — FedAsync-style polynomial decay."""
+    return (1.0 + tau) ** (-a)
+
+
+@staleness_schedule("hinge")
+def _hinge(tau, a, b):
+    """s(tau) = 1 for tau <= b, else 1 / (1 + a * (tau - b))."""
+    return jnp.where(tau <= b, 1.0, 1.0 / (1.0 + a * (tau - b)))
+
+
+def decay(name: str, tau: jnp.ndarray, *, a: float, b: float) -> jnp.ndarray:
+    """Evaluate schedule ``name`` at (integer or float) staleness ``tau``."""
+    try:
+        fn = STALENESS_FNS[name]
+    except KeyError:
+        raise KeyError(f"unknown staleness schedule {name!r}; "
+                       f"registered: {names()}") from None
+    return fn(jnp.asarray(tau).astype(jnp.float32), a, b)
+
+
+def names() -> Tuple[str, ...]:
+    return tuple(STALENESS_FNS)

@@ -15,6 +15,13 @@ orthogonal axes, each a dataclass field the round engine consumes:
   ``"copy"`` = cold copy of the cluster model);
 * ``cost_model``     — ``"hierarchical"`` (Eq. 7-10 two-stage costs) or
   ``"centralized"`` (raw-data upload to one satellite server, §IV-A);
+* ``aggregation``    — the round-scheduling discipline (``"sync"`` =
+  lockstep rounds in the scan engine (`core/engine.py`);
+  ``"async-buffered"`` = event-driven FedBuff-style buffered aggregation
+  with staleness-decay weighting in `core/async_engine.py`: clients run
+  on their own virtual clocks, the earliest-deadline cohort is popped
+  per event, and cluster models advance whenever their update buffer
+  fills — ``engine.run`` routes such strategies there automatically);
 * ``connectivity``   — how link availability gates the round
   (``"always"`` = every link is permanently up, today's idealized
   behavior; ``"visibility"`` = participation and stage-2 are gated by the
@@ -118,6 +125,7 @@ class Strategy:
     inherit: str = "maml"              # "maml" (§III-C) | "copy"
     cost_model: str = "hierarchical"   # "hierarchical" | "centralized"
     connectivity: str = "always"       # "always" | "visibility" | "isl"
+    aggregation: str = "sync"          # "sync" | "async-buffered"
     description: str = ""
 
     def __post_init__(self):
@@ -131,13 +139,31 @@ class Strategy:
                              ("cost_model", self.cost_model,
                               ("hierarchical", "centralized")),
                              ("connectivity", self.connectivity,
-                              ("always", "visibility", "isl"))):
+                              ("always", "visibility", "isl")),
+                             ("aggregation", self.aggregation,
+                              ("sync", "async-buffered"))):
             if val not in ok:
                 raise ValueError(f"{fld}={val!r} not in {ok}")
         if self.connectivity != "always" and self.cost_model == "centralized":
             raise ValueError("connectivity gating requires the hierarchical "
                              "cost model (the centralized baseline has no "
                              "cluster PS to route to)")
+        if self.aggregation == "async-buffered":
+            if self.cost_model == "centralized":
+                raise ValueError("async-buffered aggregation needs the "
+                                 "hierarchical cost model (there is no "
+                                 "buffered variant of raw-data upload)")
+            if self.recluster != "never":
+                raise ValueError("async-buffered aggregation requires "
+                                 "recluster='never': the event engine keeps "
+                                 "the cluster layout static (dynamic "
+                                 "re-clustering of in-flight buffers is an "
+                                 "open ROADMAP item)")
+            if self.connectivity == "isl":
+                raise ValueError("async-buffered + connectivity='isl' is "
+                                 "not implemented (on-board async consensus "
+                                 "is an open ROADMAP item); use 'always' or "
+                                 "'visibility'")
 
     # convenience predicates the engine branches on (all static / Python)
     @property
@@ -173,6 +199,18 @@ class Strategy:
     def isl_global(self) -> bool:
         """Stage 2 is the on-board inter-PS ISL consensus (no GS)."""
         return self.connectivity == "isl"
+
+    @property
+    def is_async(self) -> bool:
+        """Runs on the event-driven buffered engine (async_engine.py)."""
+        return self.aggregation == "async-buffered"
+
+    @property
+    def flat(self) -> bool:
+        """Single-server layout: one cluster regardless of cfg.num_clusters
+        (FedBuff's flat topology), but still model-upload hierarchical
+        costs — distinct from ``centralized`` (raw-data c-fedavg)."""
+        return self.cluster_init == "single" and not self.centralized
 
 
 _REGISTRY: Dict[str, Strategy] = {}
@@ -250,3 +288,33 @@ ISL_ONBOARD = register(Strategy(
                 "stage 2 is an all-to-all cluster-model exchange between "
                 "PSs over multi-hop ISL routes, fired when every PS pair "
                 "is mutually reachable"))
+
+# ---- asynchronous buffered methods (event-driven engine) ------------------
+
+FEDBUFF = register(Strategy(
+    "fedbuff", cluster_init="single", weighting="data",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    aggregation="async-buffered",
+    description="FedBuff (Nguyen et al., AISTATS 2022): flat single-server "
+                "buffered async — clients run on their own virtual clocks, "
+                "the server aggregates whenever the update buffer fills, "
+                "updates weighted by a staleness-decay schedule"))
+
+FEDHC_ASYNC = register(Strategy(
+    "fedhc-async", cluster_init="position", weighting="loss",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    aggregation="async-buffered",
+    description="FedHC on the async engine: stage-1 is per-cluster "
+                "buffered async (loss x staleness-decay weights, each PS "
+                "advances when its own buffer fills), stage-2 is a "
+                "buffered all-cluster aggregation fired after every "
+                "cluster has committed m flushes"))
+
+FEDSPACE_ASYNC = register(Strategy(
+    "fedspace-async", cluster_init="position", weighting="data",
+    recluster="never", inherit="copy", cost_model="hierarchical",
+    connectivity="visibility", aggregation="async-buffered",
+    description="FedSpace x FedBuff hybrid: per-cluster buffered async "
+                "with contact-plan gating — upload validity and route "
+                "costs are looked up at each client's OWN clock, and the "
+                "buffered stage-2 defers until a ground-station window"))

@@ -18,6 +18,21 @@ modulo the horizon; sampling a single orbital period treats the ground
 station track as periodic at the orbit period, a standard contact-plan
 approximation (Earth rotates ~28 deg per 1300 km-orbit period, which
 shifts window phases but not their statistics).
+
+Storage: the (T, N, N) ``isl_tpb`` route table dominates the footprint
+(~1.5 GB at N=800 / dt=10 s in f32).  Two independent reducers:
+
+* ``storage_dtype=bfloat16`` halves it (values only; reachability is
+  bit-identical — bf16 keeps f32's exponent range, so inf survives);
+* **cluster slices** (:class:`ClusterContactPlan`, via the
+  ``cluster_slices=(assignment, ps_index)`` build argument): for
+  strategies with a *static* cluster layout (``recluster="never"``), the
+  engine only ever gathers (a) each member's route to its own PS and
+  (b) the PS rows (PS -> everyone, for gateway selection and PS-pair
+  consensus).  Storing just those — (T, N) + (T, K, N) — instead of the
+  full (T, N, N) cuts the table ~N/(K+1)-fold (~17 MB at N=800 / K=8 /
+  dt=10 s), and the slicing happens *inside* the per-sample build scan,
+  so the full table is never materialized even transiently.
 """
 from __future__ import annotations
 
@@ -44,6 +59,20 @@ class ContactPlan(NamedTuple):
     #                           paper scale), upcast to f32 by ``lookup``
 
 
+class ClusterContactPlan(NamedTuple):
+    """Cluster-sliced plan: only the routes a static-layout strategy can
+    gather.  ``tpb_to_ps[t, i]`` is member ``i``'s route to its own
+    cluster PS; ``ps_rows[t, k, j]`` is cluster ``k``'s PS route to
+    satellite ``j`` (gateway selection takes a max over PS rows, PS-pair
+    consensus gathers their columns).  (T,N) + (T,K,N) instead of
+    (T,N,N)."""
+    times: jnp.ndarray       # (T,) f32 sample times (s); uniform cadence
+    gs_visible: jnp.ndarray  # (T, N) bool
+    gs_dist_km: jnp.ndarray  # (T, N) f32
+    tpb_to_ps: jnp.ndarray   # (T, N) member -> its PS route s/bit
+    ps_rows: jnp.ndarray     # (T, K, N) PS -> every sat route s/bit
+
+
 def build_contact_plan(constellation: Constellation,
                        lp: Optional[LinkParams] = None, *,
                        dt_s: float = 60.0,
@@ -52,7 +81,9 @@ def build_contact_plan(constellation: Constellation,
                        min_elevation_deg: float = 10.0,
                        max_range_km: float = 8000.0,
                        max_hops: int = 8,
-                       storage_dtype: jnp.dtype = jnp.float32) -> ContactPlan:
+                       storage_dtype: jnp.dtype = jnp.float32,
+                       cluster_slices: Optional[Tuple[jnp.ndarray,
+                                                      jnp.ndarray]] = None):
     """Sample visibility + ISL routing over ``horizon_s`` (default: one
     orbital period) at a cadence of ~``dt_s`` seconds.
 
@@ -62,17 +93,26 @@ def build_contact_plan(constellation: Constellation,
     accumulate as phase drift between the plan rows and the live
     propagator over many orbits.
 
-    ``storage_dtype`` sets the ``isl_tpb`` storage precision.  The
+    ``storage_dtype`` sets the route-table storage precision.  The
     (T, N, N) route table is the plan's dominant footprint — hundreds of
     MB at N=800/dt=60s in f32 — and bf16 halves it; routing is computed
     in f32 and only *stored* narrow (infinities survive the cast: bf16
     keeps f32's exponent range), then :func:`lookup` upcasts, so the
-    only loss is ~0.4% relative rounding on the route weights."""
+    only loss is ~0.4% relative rounding on the route weights.
+
+    ``cluster_slices=(assignment (N,), ps_index (K,))`` returns a
+    :class:`ClusterContactPlan` instead: per sample only the member->PS
+    routes and the K PS rows are kept — (T,N)+(T,K,N) storage — sliced
+    inside the build scan so the (T,N,N) table never materializes.  Only
+    valid for a static cluster layout (``recluster="never"``)."""
     lp = lp or LinkParams()
     horizon = constellation.period_s if horizon_s is None else horizon_s
     n_samples = max(1, int(round(horizon / dt_s)))
     dt = horizon / n_samples
     times = jnp.arange(n_samples, dtype=jnp.float32) * jnp.float32(dt)
+    if cluster_slices is not None:
+        assignment, ps_index = cluster_slices
+        ps_of_member = jnp.asarray(ps_index)[jnp.asarray(assignment)]  # (N,)
 
     def sample(_, t):
         pos = constellation.positions(t)
@@ -81,14 +121,35 @@ def build_contact_plan(constellation: Constellation,
         vis = visible(pos, gs, min_elevation_deg)
         dist = jnp.linalg.norm(pos - gs[None, :], axis=-1)
         tpb = topology.route_time_per_bit(pos, lp, max_range_km, max_hops)
-        return None, (vis, dist.astype(jnp.float32), tpb.astype(storage_dtype))
+        if cluster_slices is not None:
+            n = tpb.shape[0]
+            routes = (tpb[jnp.arange(n), ps_of_member].astype(storage_dtype),
+                      tpb[jnp.asarray(ps_index)].astype(storage_dtype))
+        else:
+            routes = (tpb.astype(storage_dtype),)
+        return None, (vis, dist.astype(jnp.float32)) + routes
 
     # scan, not vmap: the O(N^3) routing relaxation stays one (N,N,N)
     # buffer instead of a (T,N,N,N) batch — the build must survive the
     # 800-satellite target, where the batched form is hundreds of GB
-    _, (gs_vis, gs_dist, isl_tpb) = jax.jit(
-        lambda ts: jax.lax.scan(sample, None, ts))(times)
+    _, out = jax.jit(lambda ts: jax.lax.scan(sample, None, ts))(times)
+    if cluster_slices is not None:
+        gs_vis, gs_dist, tpb_to_ps, ps_rows = out
+        return ClusterContactPlan(times, gs_vis, gs_dist, tpb_to_ps, ps_rows)
+    gs_vis, gs_dist, isl_tpb = out
     return ContactPlan(times, gs_vis, gs_dist, isl_tpb)
+
+
+def _sample_index(plan, t: jnp.ndarray) -> jnp.ndarray:
+    """Nearest-sample index (wraps modulo the horizon); ``t`` may be a
+    scalar or a per-client vector."""
+    n = plan.times.shape[0]
+    dt = jnp.where(n > 1, plan.times[1] - plan.times[0], jnp.float32(1.0))
+    return jnp.round(t / dt).astype(jnp.int32) % n
+
+
+def _f32(x: jnp.ndarray) -> jnp.ndarray:
+    return x if x.dtype == jnp.float32 else x.astype(jnp.float32)
 
 
 def lookup(plan: ContactPlan, t_sim: jnp.ndarray
@@ -99,13 +160,33 @@ def lookup(plan: ContactPlan, t_sim: jnp.ndarray
     Returns ``(gs_visible (N,), gs_dist_km (N,), isl_tpb (N,N))``; the
     route table is upcast to f32 regardless of the plan's storage dtype
     (a no-op for f32 plans, so the default path stays bit-compatible)."""
-    n = plan.times.shape[0]
-    dt = jnp.where(n > 1, plan.times[1] - plan.times[0], jnp.float32(1.0))
-    idx = jnp.round(t_sim / dt).astype(jnp.int32) % n
-    tpb = plan.isl_tpb[idx]
-    if tpb.dtype != jnp.float32:
-        tpb = tpb.astype(jnp.float32)
-    return plan.gs_visible[idx], plan.gs_dist_km[idx], tpb
+    idx = _sample_index(plan, t_sim)
+    return plan.gs_visible[idx], plan.gs_dist_km[idx], _f32(plan.isl_tpb[idx])
+
+
+def lookup_sliced(plan: ClusterContactPlan, t_sim: jnp.ndarray
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
+                             jnp.ndarray]:
+    """Scalar-time lookup on a cluster-sliced plan: returns
+    ``(gs_visible (N,), gs_dist_km (N,), tpb_to_ps (N,), ps_rows (K,N))``
+    — exactly the gathers the static-layout engine paths consume."""
+    idx = _sample_index(plan, t_sim)
+    return (plan.gs_visible[idx], plan.gs_dist_km[idx],
+            _f32(plan.tpb_to_ps[idx]), _f32(plan.ps_rows[idx]))
+
+
+def route_to_ps_per_client(plan, t_clients: jnp.ndarray,
+                           ps_of_member: jnp.ndarray) -> jnp.ndarray:
+    """Each member's route seconds-per-bit to its cluster PS, sampled at
+    its OWN time: ``tpb[i] = route(i -> ps_of_member[i]) at t_clients[i]``
+    (inf = no route at that member's clock).  Works on both plan kinds;
+    ``ps_of_member`` is ignored for :class:`ClusterContactPlan` (the
+    slice already encodes the member -> PS map it was built with)."""
+    idx = _sample_index(plan, t_clients)                        # (N,)
+    i = jnp.arange(t_clients.shape[0])
+    if isinstance(plan, ClusterContactPlan):
+        return _f32(plan.tpb_to_ps[idx, i])
+    return _f32(plan.isl_tpb[idx, i, ps_of_member])
 
 
 def contact_windows(plan: ContactPlan, sat: int) -> list:

@@ -38,6 +38,24 @@ def compute_energy_j(data_sizes, freqs, p: ComputeParams) -> jnp.ndarray:
     return p.eps0 * freqs * compute_time_s(data_sizes, freqs, p)
 
 
+def cluster_member_costs(positions, ps_positions, data_sizes, freqs,
+                         model_bits: float, lp: LinkParams, cp: ComputeParams
+                         ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-member round cost vectors (no reduction): ``t_i = t_cmp + t_com``
+    and ``e_i`` = upload (Eq. 8) + local compute (Eq. 9), with the PS
+    broadcast back counted as one more model transmission.
+
+    The synchronous engine reduces these to a makespan/energy-sum
+    (:func:`cluster_round_costs`); the async engine advances each client's
+    *own* virtual clock by ``t_i`` instead."""
+    d = jnp.linalg.norm(positions - ps_positions, axis=-1)
+    t_cmp = compute_time_s(data_sizes, freqs, cp)
+    t_com = comm_time_s(model_bits, d, lp)
+    e = (2.0 * tx_energy_j(model_bits, d, lp)
+         + compute_energy_j(data_sizes, freqs, cp))
+    return t_cmp + t_com, e
+
+
 def cluster_round_costs(positions, ps_positions, assignment, participating,
                         data_sizes, freqs, model_bits: float,
                         lp: LinkParams, cp: ComputeParams
@@ -47,15 +65,10 @@ def cluster_round_costs(positions, ps_positions, assignment, participating,
     positions (C,3); ps_positions (C,3) = position of each client's PS.
     Returns (round_time_s, round_energy_j); time is the synchronous-round
     makespan max_i (t_cmp + t_com) over participating clients."""
-    part = participating.astype(jnp.float32)
-    d = jnp.linalg.norm(positions - ps_positions, axis=-1)
-    t_cmp = compute_time_s(data_sizes, freqs, cp)
-    t_com = comm_time_s(model_bits, d, lp)
-    t_round = jnp.max(jnp.where(participating, t_cmp + t_com, 0.0))
-    # energy: upload (Eq. 8) + local compute (Eq. 9); the PS broadcast back
-    # is counted as one more model transmission per participating client.
-    e = part * (2.0 * tx_energy_j(model_bits, d, lp)
-                + compute_energy_j(data_sizes, freqs, cp))
+    t_i, e_i = cluster_member_costs(positions, ps_positions, data_sizes,
+                                    freqs, model_bits, lp, cp)
+    t_round = jnp.max(jnp.where(participating, t_i, 0.0))
+    e = participating.astype(jnp.float32) * e_i
     return t_round, jnp.sum(e)
 
 
@@ -67,6 +80,21 @@ def ground_round_costs(ps_sat_positions, gs_position, model_bits: float,
     t = comm_time_s(model_bits, d, lp, to_ground=True)
     e = 2.0 * tx_energy_j(model_bits, d, lp, to_ground=True)
     return jnp.max(t), jnp.sum(e)
+
+
+def routed_cluster_member_costs(tpb_to_ps, reachable, data_sizes, freqs,
+                                model_bits: float, lp: LinkParams,
+                                cp: ComputeParams
+                                ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Per-member hop-aware round cost vectors: upload follows the
+    multi-hop ISL route to the PS.  ``reachable`` (C,) bool masks members
+    with no route (their ``tpb`` is inf — comm time/energy become 0: no
+    upload is attempted, only local compute is spent)."""
+    t_cmp = compute_time_s(data_sizes, freqs, cp)
+    t_com = jnp.where(reachable, model_bits * tpb_to_ps, 0.0)
+    e = (2.0 * lp.tx_power_w * t_com
+         + compute_energy_j(data_sizes, freqs, cp))
+    return t_cmp + t_com, e
 
 
 def routed_cluster_round_costs(tpb_to_ps, participating, data_sizes, freqs,
@@ -81,12 +109,11 @@ def routed_cluster_round_costs(tpb_to_ps, participating, data_sizes, freqs,
     members must be masked out of ``participating``.  Every hop along the
     route retransmits at ``P0``, so route energy is ``P0 * bits * tpb``;
     the PS broadcast back is one more route transmission."""
-    part_f = participating.astype(jnp.float32)
-    t_cmp = compute_time_s(data_sizes, freqs, cp)
-    t_com = jnp.where(participating, model_bits * tpb_to_ps, 0.0)
-    t_round = jnp.max(jnp.where(participating, t_cmp + t_com, 0.0))
-    e = part_f * (2.0 * lp.tx_power_w * t_com
-                  + compute_energy_j(data_sizes, freqs, cp))
+    t_i, e_i = routed_cluster_member_costs(tpb_to_ps, participating,
+                                           data_sizes, freqs, model_bits,
+                                           lp, cp)
+    t_round = jnp.max(jnp.where(participating, t_i, 0.0))
+    e = participating.astype(jnp.float32) * e_i
     return t_round, jnp.sum(e)
 
 

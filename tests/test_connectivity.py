@@ -163,6 +163,36 @@ def test_always_path_has_no_plan():
     assert data.plan is None
 
 
+def test_contact_slices_trajectory_parity():
+    """cfg.contact_slices stores only the member->PS and PS-row routes
+    ((T,N)+(T,K,N) instead of (T,N,N)); for a static-layout strategy the
+    gathered values are identical, so the trajectory must match the
+    full-plan run exactly."""
+    from repro.orbits import contact as contact_lib
+    cfg_full = _cfg("fedspace")
+    cfg_sliced = _cfg("fedspace", contact_slices=True)
+    _, data = engine.setup(cfg_sliced)
+    assert isinstance(data.plan, contact_lib.ClusterContactPlan)
+    h1 = engine.run(cfg_full)
+    h2 = engine.run(cfg_sliced)
+    for key in ("acc", "loss", "time_s", "energy_j"):
+        np.testing.assert_array_equal(h1[key], h2[key])
+    assert h1["global_rounds"] == h2["global_rounds"]
+
+
+def test_contact_slices_reject_reclustering_strategies():
+    """A sliced plan only stores routes to the build-time PS set — a
+    strategy that re-clusters must be rejected, not silently mis-routed."""
+    import dataclasses
+    from repro.core import strategies as strat_lib
+    name = "fedspace-recluster-test"
+    if name not in strat_lib.names():
+        strat_lib.register(dataclasses.replace(
+            strat_lib.get("fedspace"), name=name, recluster="dropout"))
+    with pytest.raises(ValueError, match="static cluster layout"):
+        engine.setup(_cfg(name, contact_slices=True))
+
+
 def test_run_many_seeds_shares_one_plan():
     """The vmapped sweep broadcasts a single contact plan across seeds
     (it is seed-independent) and its rows match solo runs."""

@@ -147,3 +147,103 @@ def test_gs_blackout_and_open_masks():
     assert int(np.asarray(closed.gs_visible).sum()) == 0
     open_ = C.build_contact_plan(c, dt_s=600.0, min_elevation_deg=-90.0)
     assert bool(np.asarray(open_.gs_visible).all())
+
+
+# ---- cluster-sliced storage (routes a static-layout strategy gathers) -----
+
+
+def _sliced_pair(dt_s=300.0, k=3):
+    """A full plan and its cluster-sliced twin for a fixed layout."""
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    n = c.num_sats
+    assignment = jnp.asarray(np.arange(n) % k, jnp.int32)
+    ps_index = jnp.asarray([1, 9, 17], jnp.int32)[:k]
+    full = C.build_contact_plan(c, LinkParams(), dt_s=dt_s)
+    sliced = C.build_contact_plan(c, LinkParams(), dt_s=dt_s,
+                                  cluster_slices=(assignment, ps_index))
+    return c, full, sliced, assignment, ps_index
+
+
+def test_cluster_slices_match_full_plan_gathers():
+    """Every stored slice equals the corresponding gather from the full
+    (T,N,N) table — same values, same reachability."""
+    _, full, sliced, assignment, ps_index = _sliced_pair()
+    assert isinstance(sliced, C.ClusterContactPlan)
+    n = full.gs_visible.shape[1]
+    ps_of_member = np.asarray(ps_index)[np.asarray(assignment)]
+    want_to_ps = np.asarray(full.isl_tpb)[:, np.arange(n), ps_of_member]
+    want_rows = np.asarray(full.isl_tpb)[:, np.asarray(ps_index), :]
+    np.testing.assert_array_equal(np.asarray(sliced.tpb_to_ps), want_to_ps)
+    np.testing.assert_array_equal(np.asarray(sliced.ps_rows), want_rows)
+    np.testing.assert_array_equal(np.asarray(sliced.gs_visible),
+                                  np.asarray(full.gs_visible))
+
+
+def test_cluster_slices_shrink_storage():
+    """(T,N)+(T,K,N) vs (T,N,N): the route table shrinks ~N/(K+1)-fold."""
+    _, full, sliced, _, ps_index = _sliced_pair()
+    full_bytes = full.isl_tpb.nbytes
+    sliced_bytes = sliced.tpb_to_ps.nbytes + sliced.ps_rows.nbytes
+    n, k = full.gs_visible.shape[1], int(ps_index.shape[0])
+    assert sliced_bytes * n == full_bytes * (k + 1)
+    assert sliced_bytes < full_bytes / 4
+
+
+def test_lookup_sliced_matches_full_lookup_derivation():
+    """`lookup_sliced` returns exactly what the engine would derive from
+    a full-plan `lookup` (member->PS gather + PS rows), at several
+    times including a wrap."""
+    c, full, sliced, assignment, ps_index = _sliced_pair()
+    n = full.gs_visible.shape[1]
+    ps_of_member = np.asarray(ps_index)[np.asarray(assignment)]
+    for t in (0.0, 601.0, float(c.period_s) + 300.0):
+        vis_f, dist_f, tpb = C.lookup(full, jnp.float32(t))
+        vis_s, dist_s, to_ps, rows = C.lookup_sliced(sliced, jnp.float32(t))
+        np.testing.assert_array_equal(np.asarray(vis_s), np.asarray(vis_f))
+        np.testing.assert_array_equal(np.asarray(dist_s),
+                                      np.asarray(dist_f))
+        np.testing.assert_array_equal(
+            np.asarray(to_ps),
+            np.asarray(tpb)[np.arange(n), ps_of_member])
+        np.testing.assert_array_equal(np.asarray(rows),
+                                      np.asarray(tpb)[np.asarray(ps_index)])
+
+
+def test_sliced_build_respects_storage_dtype():
+    _, _, _, assignment, ps_index = _sliced_pair()
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    bf = C.build_contact_plan(c, LinkParams(), dt_s=600.0,
+                              storage_dtype=jnp.bfloat16,
+                              cluster_slices=(assignment, ps_index))
+    assert bf.tpb_to_ps.dtype == jnp.bfloat16
+    assert bf.ps_rows.dtype == jnp.bfloat16
+    _, _, to_ps, rows = C.lookup_sliced(bf, jnp.float32(0.0))
+    assert to_ps.dtype == jnp.float32 and rows.dtype == jnp.float32
+
+
+# ---- per-client-clock lookups (the async engine's gathers) ----------------
+
+
+def test_route_to_ps_per_client_keys_each_row_by_its_own_time():
+    """Row i sampled at t_clients[i]: mixing two distinct times must
+    reproduce the corresponding rows of the two scalar lookups, on both
+    plan kinds."""
+    c, full, sliced, assignment, ps_index = _sliced_pair(dt_s=120.0)
+    n = full.gs_visible.shape[1]
+    ps_of_member = jnp.asarray(
+        np.asarray(ps_index)[np.asarray(assignment)], jnp.int32)
+    dt = float(full.times[1] - full.times[0])
+    t_a, t_b = 0.0, 7 * dt
+    t_clients = jnp.where(jnp.arange(n) % 2 == 0, t_a, t_b)
+    for plan in (full, sliced):
+        got = np.asarray(C.route_to_ps_per_client(plan, t_clients,
+                                                  ps_of_member))
+        _, _, tpb_a = C.lookup(full, jnp.float32(t_a))
+        _, _, tpb_b = C.lookup(full, jnp.float32(t_b))
+        want_a = np.asarray(tpb_a)[np.arange(n),
+                                   np.asarray(ps_of_member)]
+        want_b = np.asarray(tpb_b)[np.arange(n),
+                                   np.asarray(ps_of_member)]
+        even = np.arange(n) % 2 == 0
+        np.testing.assert_array_equal(got[even], want_a[even])
+        np.testing.assert_array_equal(got[~even], want_b[~even])

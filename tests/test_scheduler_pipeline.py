@@ -1,9 +1,13 @@
 """Scheduler + data pipeline units."""
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.scheduler import Schedule, should_aggregate_globally
+from repro.core.scheduler import (Schedule, ground_stage_allowed,
+                                  should_aggregate_globally)
 from repro.data.pipeline import batches
+from repro.orbits import contact as contact_lib
 from repro.orbits.constellation import Constellation
+from repro.orbits.links import LinkParams
 
 
 def test_scheduler_cadence():
@@ -24,6 +28,26 @@ def test_scheduler_visibility_gate():
         should_aggregate_globally(sch, 0, c, t, list(range(0, 64, 4)))[1]
         for t in (0.0, 600.0, 1200.0))
     assert fired_any
+
+
+def test_legacy_gate_agrees_with_contact_plan():
+    """Cross-reference pin: the legacy host-side gate
+    (`scheduler.ground_stage_allowed`) and the canonical contact-plan
+    gate (`orbits/contact.py` ``gs_visible`` rows) are the same
+    predicate — at every plan sample time, for the same elevation mask
+    and PS set, they must agree exactly."""
+    c = Constellation(num_planes=4, sats_per_plane=4)
+    elev = 10.0
+    plan = contact_lib.build_contact_plan(c, LinkParams(), dt_s=300.0,
+                                          min_elevation_deg=elev)
+    ps = jnp.asarray([0, 5, 10], jnp.int32)
+    for i in range(int(plan.times.shape[0])):
+        t = float(plan.times[i])
+        legacy = bool(ground_stage_allowed(c, t, ps,
+                                           min_elevation_deg=elev))
+        vis_row, _, _ = contact_lib.lookup(plan, jnp.float32(t))
+        from_plan = bool(np.asarray(vis_row)[np.asarray(ps)].any())
+        assert legacy == from_plan, (i, t, legacy, from_plan)
 
 
 def test_pipeline_shapes_and_labels():

@@ -1,0 +1,66 @@
+"""Staleness-decay schedule semantics (`core/staleness.py`): every
+registered schedule is 1 at tau=0, bounded in (0, 1], and monotone
+non-increasing in tau — the properties the buffered-async weighting
+relies on (a staler update must never count for MORE)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from proptest import given, settings, st
+from repro.core import staleness as stale_lib
+
+TAUS = jnp.arange(0.0, 40.0)
+
+
+@pytest.mark.parametrize("name", stale_lib.names())
+def test_registry_has_all_three(name):
+    assert {"constant", "polynomial", "hinge"} <= set(stale_lib.names())
+    assert name in stale_lib.STALENESS_FNS
+
+
+@pytest.mark.parametrize("name", stale_lib.names())
+@pytest.mark.parametrize("a,b", [(0.25, 2.0), (0.5, 4.0), (1.0, 0.0),
+                                 (2.0, 8.0)])
+def test_monotone_non_increasing_and_bounded(name, a, b):
+    w = np.asarray(stale_lib.decay(name, TAUS, a=a, b=b))
+    assert np.all(np.isfinite(w))
+    assert np.all(w > 0.0) and np.all(w <= 1.0)
+    assert np.all(np.diff(w) <= 0.0), f"{name} increased somewhere: {w}"
+
+
+@pytest.mark.parametrize("name", stale_lib.names())
+def test_fresh_update_has_unit_weight(name):
+    w = stale_lib.decay(name, jnp.float32(0.0), a=0.5, b=4.0)
+    assert float(w) == 1.0
+
+
+def test_constant_is_exactly_one():
+    """The sync-equivalence pin needs the literal 1.0 (1.0 * x == x)."""
+    w = np.asarray(stale_lib.decay("constant", TAUS, a=0.5, b=4.0))
+    assert np.all(w == 1.0)
+
+
+def test_hinge_grace_window():
+    """Hinge is exactly 1 inside the grace window, strictly below after."""
+    w = np.asarray(stale_lib.decay("hinge", TAUS, a=0.5, b=4.0))
+    assert np.all(w[TAUS <= 4.0] == 1.0)
+    assert np.all(w[np.asarray(TAUS) > 4.0] < 1.0)
+
+
+def test_unknown_schedule_raises():
+    with pytest.raises(KeyError, match="unknown staleness"):
+        stale_lib.decay("nope", jnp.float32(1.0), a=0.5, b=4.0)
+
+
+@given(a=st.floats(min_value=0.0, max_value=4.0),
+       b=st.floats(min_value=0.0, max_value=16.0),
+       tau=st.floats(min_value=0.0, max_value=100.0),
+       dtau=st.floats(min_value=0.0, max_value=50.0))
+@settings(max_examples=80, deadline=None)
+def test_property_monotone_everywhere(a, b, tau, dtau):
+    """For every schedule and any (a, b, tau, dtau >= 0):
+    s(tau + dtau) <= s(tau)."""
+    for name in stale_lib.names():
+        w0 = float(stale_lib.decay(name, jnp.float32(tau), a=a, b=b))
+        w1 = float(stale_lib.decay(name, jnp.float32(tau + dtau), a=a, b=b))
+        assert w1 <= w0 + 1e-7, (name, a, b, tau, dtau, w0, w1)
