@@ -22,14 +22,17 @@ the same total number of client-rounds — and reports:
              client mesh over all local devices + the sync-equivalence
              check — the CI forced-8-device job runs this
 
-Results land in results/async_bench.json.
+Results land in results/async_bench.json.  Timing semantics (since the
+Scenario API migration): compile_s/host_s come from `api.run`'s
+RunResult (AOT compile alone / compiled execution + history fetch);
+committed results predating the migration timed two full engine.run
+calls instead, so compare like with like.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
 
 import numpy as np
 
@@ -37,37 +40,39 @@ SYNC_METHOD = "fedhc"
 ASYNC_METHODS = ("fedhc-async", "fedbuff")
 
 
-def _cfg(method: str, n: int, rounds: int, cohort: int = 0, **kw):
-    from repro.core.fedhc import FLRunConfig
-    base = dict(method=method, num_clients=n,
-                num_clusters=max(4, n // 100), rounds=rounds,
-                rounds_per_global=2, samples_per_client=16, local_steps=1,
-                batch_size=16, eval_size=256,
-                async_cohort=cohort, async_buffer=cohort)
-    base.update(kw)
-    return FLRunConfig(**base)
+def _scenario(method: str, n: int, rounds: int, cohort: int = 0, *,
+              num_clusters: int = 0, eval_every: int = 5,
+              staleness: str = "polynomial"):
+    from repro.api import (AsyncSpec, DataSpec, FleetSpec, Scenario,
+                           TrainSpec)
+    return Scenario(
+        method=method,
+        data=DataSpec(samples_per_client=16, eval_size=256),
+        fleet=FleetSpec(num_clients=n,
+                        num_clusters=num_clusters or max(4, n // 100)),
+        train=TrainSpec(rounds=rounds, rounds_per_global=2, local_steps=1,
+                        batch_size=16, eval_every=eval_every),
+        async_=AsyncSpec(cohort=cohort, buffer=cohort,
+                         staleness=staleness),
+    )
 
 
-def _run_once(cfg) -> dict:
-    from repro.core import engine
-    t0 = time.time()
-    h = engine.run(cfg)                     # compile + run
-    compile_s = time.time() - t0
-    t0 = time.time()
-    h = engine.run(cfg)
-    host_s = time.time() - t0
+def _run_once(scenario) -> dict:
+    from repro import api
+    res = api.run(scenario)
     out = {
-        "rounds": cfg.rounds,
-        "compile_s": round(compile_s, 2), "host_s": round(host_s, 2),
-        "sim_time_s": round(h["time_s"][-1], 1),
-        "sim_energy_j": round(h["energy_j"][-1], 1),
-        "final_acc": round(h["acc"][-1], 4),
-        "acc_vs_time": [[round(t, 1), round(a, 4)]
-                        for t, a in zip(h["time_s"], h["acc"])],
+        "rounds": scenario.train.rounds,
+        "compile_s": round(res.compile_s, 2),
+        "host_s": round(res.run_s, 2),
+        "sim_time_s": round(float(res.time_s[-1]), 1),
+        "sim_energy_j": round(float(res.energy_j[-1]), 1),
+        "final_acc": round(res.final_acc, 4),
+        "acc_vs_time": [[round(float(t), 1), round(float(a), 4)]
+                        for t, a in zip(res.time_s, res.acc)],
     }
-    if "flushes" in h:
-        out["flushes"] = h["flushes"]
-        out["mean_staleness"] = round(h["mean_staleness"], 3)
+    if res.flushes is not None:
+        out["flushes"] = res.flushes
+        out["mean_staleness"] = round(res.mean_staleness, 3)
     return out
 
 
@@ -75,12 +80,12 @@ def bench_n(n: int, rounds_sync: int = 4) -> dict:
     cohort = max(8, n // 8)
     events = rounds_sync * n // cohort      # equal total client-rounds
     point = {"num_clients": n, "cohort": cohort}
-    sync = _run_once(_cfg(SYNC_METHOD, n, rounds_sync,
-                          eval_every=max(1, rounds_sync // 2)))
+    sync = _run_once(_scenario(SYNC_METHOD, n, rounds_sync,
+                               eval_every=max(1, rounds_sync // 2)))
     point[SYNC_METHOD] = sync
     for method in ASYNC_METHODS:
-        r = _run_once(_cfg(method, n, events, cohort=cohort,
-                           eval_every=max(1, events // 2)))
+        r = _run_once(_scenario(method, n, events, cohort=cohort,
+                                eval_every=max(1, events // 2)))
         r["sim_speedup_vs_sync"] = round(
             sync["sim_time_s"] / max(r["sim_time_s"], 1e-9), 3)
         point[method] = r
@@ -101,26 +106,26 @@ def smoke() -> dict:
     import dataclasses
 
     import jax
-    from repro.core import engine
+    from repro import api
     from repro.core import strategies as strat_lib
-    from repro.launch.mesh import make_client_mesh
 
     ndev = len(jax.devices())
     assert ndev > 1, ("async smoke needs >1 device; set XLA_FLAGS="
                       "--xla_force_host_platform_device_count=8")
-    mesh = make_client_mesh()
     n = 4 * ndev
-    cfg = _cfg("fedbuff", n, rounds=8, cohort=n // 4, eval_every=4,
-               num_clusters=1)
-    h_sharded = engine.run(cfg, mesh=mesh)
-    h_single = engine.run(cfg)
-    np.testing.assert_allclose(h_sharded["time_s"], h_single["time_s"],
+    sc = _scenario("fedbuff", n, rounds=8, cohort=n // 4, eval_every=4,
+                   num_clusters=1)
+    # ExecSpec(mesh_devices=0) = client mesh over every local device
+    r_sharded = api.run(sc.replace(exec=api.ExecSpec(mesh_devices=0)))
+    r_single = api.run(sc)
+    np.testing.assert_allclose(r_sharded.time_s, r_single.time_s,
                                rtol=1e-5)
-    np.testing.assert_allclose(h_sharded["loss"], h_single["loss"],
+    np.testing.assert_allclose(r_sharded.loss, r_single.loss,
                                rtol=1e-4, atol=1e-5)
-    assert h_sharded["flushes"] == h_single["flushes"] >= 1
+    assert r_sharded.flushes == r_single.flushes >= 1
+    assert r_sharded.mesh_shape == {"clients": ndev}
     print(f"[async] sharded fedbuff smoke OK over {ndev} devices "
-          f"(flushes {h_sharded['flushes']}, acc {h_sharded['acc']})")
+          f"(flushes {r_sharded.flushes}, acc {r_sharded.acc})")
 
     # sync-equivalence: full cohort + full buffer + constant decay.
     # Under the forced multi-device topology XLA fuses the two engines'
@@ -131,16 +136,17 @@ def smoke() -> dict:
     if name not in strat_lib.names():
         strat_lib.register(dataclasses.replace(
             strat_lib.get("fedhc-async"), name=name, aggregation="sync"))
-    cfg_a = _cfg("fedhc-async", 16, rounds=8, cohort=16, eval_every=4,
-                 num_clusters=3, staleness="constant")
-    cfg_s = _cfg(name, 16, rounds=8, eval_every=4, num_clusters=3)
-    h_a, h_s = engine.run(cfg_a), engine.run(cfg_s)
-    np.testing.assert_allclose(h_a["loss"], h_s["loss"], rtol=1e-5)
-    np.testing.assert_allclose(h_a["time_s"], h_s["time_s"], rtol=1e-5)
-    np.testing.assert_allclose(h_a["energy_j"], h_s["energy_j"], rtol=1e-5)
-    assert h_a["global_rounds"] == h_s["global_rounds"] >= 1
+    r_a = api.run(_scenario("fedhc-async", 16, rounds=8, cohort=16,
+                            eval_every=4, num_clusters=3,
+                            staleness="constant"))
+    r_s = api.run(_scenario(name, 16, rounds=8, eval_every=4,
+                            num_clusters=3))
+    np.testing.assert_allclose(r_a.loss, r_s.loss, rtol=1e-5)
+    np.testing.assert_allclose(r_a.time_s, r_s.time_s, rtol=1e-5)
+    np.testing.assert_allclose(r_a.energy_j, r_s.energy_j, rtol=1e-5)
+    assert r_a.global_rounds == r_s.global_rounds >= 1
     print("[async] full-cohort zero-staleness == sync: equivalence OK")
-    return {"devices": ndev, "flushes": h_sharded["flushes"]}
+    return {"devices": ndev, "flushes": r_sharded.flushes}
 
 
 def main(fast: bool = False,

@@ -1,7 +1,7 @@
 """Paper Fig. 3: model accuracy vs training round for each method, across
 clustering configurations K in {3,4,5}, on both datasets.
 
-Each grid cell is seed-averaged: `engine.run_many_seeds` stacks the
+Each grid cell is seed-averaged: `repro.api.run_sweep` stacks the
 per-seed setups and vmaps the whole round scan, so the curves for all
 seeds of a cell come from ONE compiled call (and one device fetch).
 
@@ -18,25 +18,24 @@ import time
 import numpy as np
 
 import benchmarks.fl_common as C
-from benchmarks.fl_common import DATASETS, METHODS, make_cfg
-from repro.core import engine
+from benchmarks.fl_common import DATASETS, METHODS, make_scenario
+from repro import api
 
 
-def run_cell(cfg, seeds) -> dict:
+def run_cell(scenario, seeds) -> dict:
     """One grid cell -> seed-averaged history dict (fig3/table1 schema:
     per-eval-round lists, plus per-seed extras)."""
-    sweep = engine.run_many_seeds(cfg, seeds)
-    idx = np.nonzero(sweep["evaluated"][0])[0]    # same cadence every seed
-    acc = sweep["acc"][:, idx]
+    sweep = api.run_sweep(scenario, seeds)
+    acc = sweep.eval_curves("acc")
     return {
-        "round": [int(i) + 1 for i in idx],
+        "round": [int(r) for r in sweep.eval_rounds],
         "acc": np.nanmean(acc, axis=0).tolist(),
         "acc_std": np.nanstd(acc, axis=0).tolist(),
-        "loss": sweep["loss"][:, idx].mean(axis=0).tolist(),
-        "time_s": sweep["time_s"][:, idx].mean(axis=0).tolist(),
-        "energy_j": sweep["energy_j"][:, idx].mean(axis=0).tolist(),
-        "reclusters": sweep["reclusters"].tolist(),
-        "global_rounds": sweep["global_rounds"].tolist(),
+        "loss": sweep.eval_curves("loss").mean(axis=0).tolist(),
+        "time_s": sweep.eval_curves("time_s").mean(axis=0).tolist(),
+        "energy_j": sweep.eval_curves("energy_j").mean(axis=0).tolist(),
+        "reclusters": sweep.reclusters.tolist(),
+        "global_rounds": sweep.global_rounds.tolist(),
         "seeds": [int(s) for s in seeds],
     }
 
@@ -62,7 +61,7 @@ def run(out_path="results/fig3_accuracy.json", datasets=("mnist-like",
                     results[key] = cfa
                     continue
                 t0 = time.time()
-                h = run_cell(make_cfg(method, k, ds), C.SEEDS)
+                h = run_cell(make_scenario(method, k, ds), C.SEEDS)
                 h["wall_s"] = round(time.time() - t0, 1)
                 if method == "c-fedavg":
                     cfa = h

@@ -4,11 +4,15 @@ Scale-down vs the paper (800 satellites, MNIST/CIFAR-10): 32 satellites,
 synthetic datasets with MNIST/CIFAR geometry (see DESIGN.md §7).  The
 *relative* claims are what we reproduce; absolute seconds/joules depend on
 the (configurable) link constants.
+
+Benchmarks build typed ``Scenario`` specs (`repro.core.scenario`) and run
+them through `repro.api`; ``make_cfg`` survives as a flat-config adapter
+for anything still on the legacy entrypoints.
 """
 from __future__ import annotations
 
+from repro.api import DataSpec, FleetSpec, Scenario, TrainSpec
 from repro.core import strategies as strat_lib
-from repro.core.fedhc import FLRunConfig
 from repro.data.synthetic import CIFAR_LIKE, MNIST_LIKE
 
 NUM_CLIENTS = 32
@@ -18,7 +22,7 @@ METHODS = ("c-fedavg", "h-base", "fedce", "fedhc")
 assert all(m in strat_lib.names() for m in METHODS)
 KS = (3, 4, 5)
 # fig3 curves are averaged over these seeds in ONE compiled
-# `engine.run_many_seeds` vmap call per grid cell
+# `api.run_sweep` vmap call per grid cell
 SEEDS = (17, 18, 19)
 
 # paper §IV-B: converged target thresholds
@@ -27,13 +31,21 @@ ROUNDS = {"mnist-like": 100, "cifar-like": 150}
 EVAL_EVERY = 5
 
 
-def make_cfg(method: str, k: int, dataset) -> FLRunConfig:
-    return FLRunConfig(
-        method=method, num_clients=NUM_CLIENTS, num_clusters=k,
-        rounds=ROUNDS[dataset.name], eval_every=EVAL_EVERY,
-        samples_per_client=96, local_steps=2, batch_size=64,
-        dataset=dataset, dirichlet_alpha=0.4, eval_size=1024, seed=17,
+def make_scenario(method: str, k: int, dataset) -> Scenario:
+    return Scenario(
+        method=method, seed=17,
+        data=DataSpec(dataset=dataset, samples_per_client=96,
+                      dirichlet_alpha=0.4, eval_size=1024),
+        fleet=FleetSpec(num_clients=NUM_CLIENTS, num_clusters=k),
+        train=TrainSpec(rounds=ROUNDS[dataset.name],
+                        eval_every=EVAL_EVERY, local_steps=2,
+                        batch_size=64),
     )
+
+
+def make_cfg(method: str, k: int, dataset):
+    """Flat-config adapter (legacy entrypoints)."""
+    return make_scenario(method, k, dataset).to_flat()
 
 
 DATASETS = {"mnist-like": MNIST_LIKE, "cifar-like": CIFAR_LIKE}

@@ -2,7 +2,7 @@
 800} (the paper evaluates FedHC up to 800 satellites).
 
 Per N it reports the one-time setup cost, the scan compile time, the
-steady-state seconds per round, and the client-stack footprint; it also
+seconds per round, and the client-stack footprint; it also
 measures the contact-plan storage-dtype tradeoff (f32 vs bf16 route
 tables — bf16 halves the dominant (T, N, N) buffer) on a small
 constellation where the O(T * N^3) build is cheap.
@@ -16,47 +16,55 @@ constellation where the O(T * N^3) build is cheap.
                      multi-device job runs this with
                      XLA_FLAGS=--xla_force_host_platform_device_count=8
 
-Results land in results/scale_bench.json.
+Results land in results/scale_bench.json.  Timing semantics (since the
+Scenario API migration): setup_s/compile_s/per_round_s come from
+`api.run`'s RunResult — compile_s is the AOT lower+compile alone (the
+first execution is no longer folded in) and per_round_s includes the
+device->host history fetch; committed results predating the migration
+used the older two-call definitions, so compare like with like.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import os
-import time
 
 import numpy as np
 
 
+def _scale_scenario(num_clients: int, rounds: int):
+    from repro.api import DataSpec, FleetSpec, Scenario, TrainSpec
+    return Scenario(
+        method="fedhc",
+        data=DataSpec(samples_per_client=16, eval_size=256),
+        fleet=FleetSpec(num_clients=num_clients,
+                        num_clusters=max(4, num_clients // 100)),
+        train=TrainSpec(rounds=rounds, rounds_per_global=2,
+                        eval_every=rounds, local_steps=1, batch_size=16),
+    )
+
+
 def bench_engine(num_clients: int, rounds: int = 3) -> dict:
-    from repro.core import engine
-    from repro.core.fedhc import FLRunConfig
+    from repro import api
+    from repro.models.lenet import init_lenet
 
-    cfg = FLRunConfig(method="fedhc", num_clients=num_clients,
-                      num_clusters=max(4, num_clients // 100),
-                      rounds=rounds, rounds_per_global=2,
-                      eval_every=rounds, samples_per_client=16,
-                      local_steps=1, batch_size=16, eval_size=256)
-    t0 = time.time()
-    state0, data = engine.setup(cfg)
+    sc = _scale_scenario(num_clients, rounds)
+    res = api.run(sc)       # RunResult carries the timing breakdown
     import jax
-    jax.block_until_ready(state0.params)
-    setup_s = time.time() - t0
-
-    fn = engine._scan_fn(cfg)
-    t0 = time.time()
-    jax.block_until_ready(fn(state0, data)[1].loss)
-    compile_s = time.time() - t0            # includes the first execution
-    t0 = time.time()
-    jax.block_until_ready(fn(state0, data)[1].loss)
-    run_s = time.time() - t0
-
-    params_mb = sum(x.size * x.dtype.itemsize
-                    for x in jax.tree_util.tree_leaves(state0.params)) / 1e6
+    ds = sc.data.dataset
+    # analytic stack size: num_clients x one freshly-initialized model
+    # (the engine stacks exactly this model per client; the param dtype
+    # is init_lenet's, same as the run's)
+    w0 = init_lenet(jax.random.PRNGKey(0), ds.channels, ds.img,
+                    ds.num_classes)
+    params_mb = num_clients * sum(
+        x.size * x.dtype.itemsize
+        for x in jax.tree_util.tree_leaves(w0)) / 1e6
     return {
         "num_clients": num_clients, "rounds": rounds,
-        "setup_s": round(setup_s, 2), "compile_s": round(compile_s, 2),
-        "per_round_s": round(run_s / rounds, 4),
+        "setup_s": round(res.setup_s, 2),
+        "compile_s": round(res.compile_s, 2),
+        "per_round_s": round(res.run_s / rounds, 4),
         "client_stack_mb": round(params_mb, 2),
     }
 
@@ -128,34 +136,39 @@ def sharded_smoke() -> dict:
     device (the CI forced-multi-device job); asserts the client axis is
     actually sharded and the trajectory matches the single-device run."""
     import jax
+    from repro import api
+    from repro.api import (DataSpec, ExecSpec, FleetSpec, Scenario,
+                           TrainSpec)
     from repro.core import engine
-    from repro.core.fedhc import FLRunConfig
     from repro.launch.mesh import make_client_mesh
 
     ndev = len(jax.devices())
     assert ndev > 1, ("sharded smoke needs >1 device; set XLA_FLAGS="
                       "--xla_force_host_platform_device_count=8")
     mesh = make_client_mesh()
-    cfg = FLRunConfig(method="fedhc", num_clients=4 * ndev, num_clusters=3,
-                      rounds=6, rounds_per_global=3, eval_every=3,
-                      samples_per_client=32, local_steps=1, batch_size=16,
-                      eval_size=128)
-    state0, _ = engine.setup(cfg, mesh=mesh)
+    sc = Scenario(
+        method="fedhc",
+        data=DataSpec(samples_per_client=32, eval_size=128),
+        fleet=FleetSpec(num_clients=4 * ndev, num_clusters=3),
+        train=TrainSpec(rounds=6, rounds_per_global=3, eval_every=3,
+                        local_steps=1, batch_size=16))
+    state0, _ = engine.setup(sc.to_flat(), mesh=mesh)
     leaf = jax.tree_util.tree_leaves(state0.params)[0]
     print(f"[scale] client mesh {dict(mesh.shape)}; param leaf "
           f"{leaf.shape} sharded as {leaf.sharding.spec} "
           f"({leaf.addressable_shards[0].data.shape[0]} clients/device)")
     jax.debug.visualize_array_sharding(leaf.reshape(leaf.shape[0], -1))
     assert leaf.sharding.spec[0] == tuple(mesh.axis_names)
-    h_sharded = engine.run(cfg, mesh=mesh)
-    h_single = engine.run(cfg)
-    np.testing.assert_allclose(h_sharded["time_s"], h_single["time_s"],
+    r_sharded = api.run(sc.replace(exec=ExecSpec(mesh_devices=0)))
+    r_single = api.run(sc)
+    assert r_sharded.mesh_shape == {"clients": ndev}
+    np.testing.assert_allclose(r_sharded.time_s, r_single.time_s,
                                rtol=1e-5)
-    np.testing.assert_allclose(h_sharded["loss"], h_single["loss"],
+    np.testing.assert_allclose(r_sharded.loss, r_single.loss,
                                rtol=1e-4, atol=1e-5)
     print(f"[scale] sharded-vs-single parity OK over {ndev} devices "
-          f"(acc {h_sharded['acc']})")
-    return {"devices": ndev, "acc": h_sharded["acc"]}
+          f"(acc {r_sharded.acc})")
+    return {"devices": ndev, "acc": r_sharded.acc.tolist()}
 
 
 def main(fast: bool = False,

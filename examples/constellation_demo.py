@@ -96,26 +96,28 @@ def main():
         row = " ".join(f"{x:.2f}" for x in w)
         print(f"  {name:10s} tau=0..8: {row}")
 
-    from repro.core import engine
-    from repro.core.fedhc import FLRunConfig
-    common = dict(num_clients=16, num_clusters=4, samples_per_client=32,
-                  local_steps=1, batch_size=16, eval_size=128,
-                  rounds_per_global=4)
+    from repro import api
+    from repro.api import AsyncSpec, DataSpec, FleetSpec, Scenario, TrainSpec
+    data = DataSpec(samples_per_client=32, eval_size=128)
+    fleet = FleetSpec(num_clients=16, num_clusters=4)
     # 6 sync rounds == 24 async events at cohort 4: same total work
-    h_sync = engine.run(FLRunConfig(method="fedhc", rounds=6, eval_every=6,
-                                    **common))
-    h_async = engine.run(FLRunConfig(method="fedhc-async", rounds=24,
-                                     eval_every=24, async_cohort=4,
-                                     async_buffer=4,
-                                     staleness="polynomial", **common))
+    h_sync = api.run(Scenario(
+        method="fedhc", data=data, fleet=fleet,
+        train=TrainSpec(rounds=6, eval_every=6, rounds_per_global=4,
+                        local_steps=1, batch_size=16)))
+    h_async = api.run(Scenario(
+        method="fedhc-async", data=data, fleet=fleet,
+        train=TrainSpec(rounds=24, eval_every=24, rounds_per_global=4,
+                        local_steps=1, batch_size=16),
+        async_=AsyncSpec(cohort=4, buffer=4, staleness="polynomial")))
     print(f"matched work (96 client-rounds): sync fedhc finishes at "
-          f"T={h_sync['time_s'][-1]:.0f}s; fedhc-async at "
-          f"T={h_async['time_s'][-1]:.0f}s "
-          f"(x{h_sync['time_s'][-1] / h_async['time_s'][-1]:.2f} faster "
+          f"T={h_sync.time_s[-1]:.0f}s; fedhc-async at "
+          f"T={h_async.time_s[-1]:.0f}s "
+          f"(x{h_sync.time_s[-1] / h_async.time_s[-1]:.2f} faster "
           f"simulated clock)")
-    print(f"async telemetry: {h_async['flushes']} buffer flushes, "
-          f"{h_async['global_rounds']} buffered stage-2 rounds, mean "
-          f"staleness {h_async['mean_staleness']:.2f} versions")
+    print(f"async telemetry: {h_async.flushes} buffer flushes, "
+          f"{h_async.global_rounds} buffered stage-2 rounds, mean "
+          f"staleness {h_async.mean_staleness:.2f} versions")
     print("the event engine pops the earliest-deadline cohort per step: "
           "fast satellites lap slow ones instead of idling on the "
           "cluster barrier; stale updates land with decayed weight")

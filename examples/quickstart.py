@@ -1,49 +1,66 @@
 """Quickstart: hierarchical clustered FL (FedHC) on a simulated LEO
-constellation in ~a minute on CPU.
+constellation in ~a minute on CPU — via the typed Scenario API.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Runs 30 FedHC rounds (16 satellites, K=3 clusters, LeNet on synthetic
-non-IID MNIST-like data), prints accuracy and the paper's Eq. 7/Eq. 10
-time/energy accounting, then compares against centralized C-FedAvg.
-Each run executes as ONE scan-compiled XLA program (core/engine.py);
-the multi-seed block at the end vmaps the whole simulation over seeds.
+An experiment is a `Scenario` (repro.core.scenario): orthogonal frozen
+sub-configs — DataSpec / FleetSpec / TrainSpec / CommsSpec / AsyncSpec /
+ExecSpec — validated at construction and exactly JSON-round-trippable.
+`api.run(scenario)` routes sync/async/sharded automatically and returns a
+typed `RunResult` (numpy history arrays, time_to_accuracy, save/load);
+`api.run_sweep` vmaps the whole simulation over seeds in one compiled
+call.  CI runs this file as the examples-smoke step, so the public API
+cannot drift from it.
 """
 import numpy as np
 
-from repro.core import engine
-from repro.core.fedhc import FLRunConfig, run_fl
+from repro import api
+from repro.api import DataSpec, FleetSpec, Scenario, TrainSpec
 
 
 def main():
-    base = dict(num_clients=16, num_clusters=3, rounds=30, eval_every=10,
-                samples_per_client=64, local_steps=2, eval_size=512)
+    base = Scenario(
+        method="fedhc",
+        data=DataSpec(samples_per_client=64, eval_size=512),
+        fleet=FleetSpec(num_clients=16, num_clusters=3),
+        train=TrainSpec(rounds=30, eval_every=10, local_steps=2),
+    )
 
     print("== FedHC (hierarchical clustered FL, satellite PS) ==")
-    h = run_fl(FLRunConfig(method="fedhc", **base), verbose=True)
+    h = api.run(base, verbose=True)
 
     print("\n== C-FedAvg (centralized baseline) ==")
-    c = run_fl(FLRunConfig(method="c-fedavg", **base), verbose=True)
+    c = api.run(base.replace(method="c-fedavg"), verbose=True)
 
     print("\nsummary (30 rounds):")
-    print(f"  FedHC    acc={h['acc'][-1]:.3f} time={h['time_s'][-1]:8.0f}s "
-          f"energy={h['energy_j'][-1]:9.1f}J reclusters={h['reclusters']}")
-    print(f"  C-FedAvg acc={c['acc'][-1]:.3f} time={c['time_s'][-1]:8.0f}s "
-          f"energy={c['energy_j'][-1]:9.1f}J")
-    print(f"  -> FedHC uses {c['time_s'][-1]/h['time_s'][-1]:.1f}x less time, "
-          f"{c['energy_j'][-1]/h['energy_j'][-1]:.1f}x less energy")
+    print(f"  FedHC    acc={h.final_acc:.3f} time={h.time_s[-1]:8.0f}s "
+          f"energy={h.energy_j[-1]:9.1f}J reclusters={h.reclusters}")
+    print(f"  C-FedAvg acc={c.final_acc:.3f} time={c.time_s[-1]:8.0f}s "
+          f"energy={c.energy_j[-1]:9.1f}J")
+    print(f"  -> FedHC uses {c.time_s[-1]/h.time_s[-1]:.1f}x less time, "
+          f"{c.energy_j[-1]/h.energy_j[-1]:.1f}x less energy")
+    target = 0.5
+    tta = h.time_to_accuracy(target)
+    print(f"  FedHC reached {target:.0%} accuracy "
+          + (f"at T={tta.time_s:.0f}s / E={tta.energy_j:.0f}J "
+             f"(round {tta.round})" if tta else "never (target too high)"))
+
+    # scenarios are manifests: exact JSON round-trip for reproducibility
+    assert Scenario.from_json(base.to_json()) == base
+    print(f"\nscenario manifest round-trips through JSON "
+          f"({len(base.to_json())} bytes); RunResult.save() embeds it")
 
     print("\n== multi-seed sweep (one compiled vmap call) ==")
     # short horizon: under vmap both lax.cond branches execute per round,
     # so the sweep pays the eval/re-cluster cost every round for all seeds
     seeds = (0, 1, 2)
-    sweep_cfg = FLRunConfig(method="fedhc", **{**base, "rounds": 10,
-                                               "eval_every": 5})
-    sweep = engine.run_many_seeds(sweep_cfg, seeds)
-    final_acc = sweep["acc"][:, -1]
+    sweep = api.run_sweep(
+        base.replace(train=TrainSpec(rounds=10, eval_every=5,
+                                     local_steps=2)), seeds)
+    final_acc = sweep.final_acc
     print(f"  FedHC 10-round final acc over seeds {list(seeds)}: "
           f"{np.mean(final_acc):.3f} +/- {np.std(final_acc):.3f} "
-          f"(reclusters per seed: {sweep['reclusters'].tolist()})")
+          f"(reclusters per seed: {sweep.reclusters.tolist()})")
 
 
 if __name__ == "__main__":

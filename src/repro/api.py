@@ -1,0 +1,331 @@
+"""One-call experiment API: ``run(scenario) -> RunResult``.
+
+This is the public face of the repro: build a typed
+:class:`~repro.core.scenario.Scenario` (orthogonal frozen sub-configs,
+validated at construction), hand it to :func:`run`, get a typed
+:class:`RunResult` back.  Routing is automatic:
+
+* synchronous strategies execute on the scan engine
+  (`repro.core.engine`), asynchronous (``async-buffered``) strategies on
+  the event engine (`repro.core.async_engine`);
+* ``scenario.exec.mesh_devices`` (or an explicit ``mesh=``) selects the
+  client-axis SPMD program variant;
+* the result is **bit-identical** to the corresponding legacy entrypoint
+  (``engine.run`` / ``async_engine.run`` on ``scenario.to_flat()``) —
+  pinned by ``tests/test_api.py`` — because both paths share the same
+  ``setup``/``_scan_fn``/``history_from_outputs`` calls.
+
+:class:`RunResult` replaces the untyped ``Dict[str, list]`` histories:
+numpy arrays per eval point, resolved-strategy metadata, mesh shape,
+setup/compile/run wall times, ``time_to_accuracy(target)`` (absorbing
+``fedhc.time_energy_to_accuracy``), and JSON ``save``/``load`` so
+benchmark results carry their exact scenario manifest.
+
+:func:`run_sweep` is the multi-seed variant (one compiled vmap over the
+seed axis, sync strategies only), returning a :class:`SweepResult`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, NamedTuple, Optional, Sequence
+
+import jax
+import numpy as np
+
+from repro.core import strategies as strat_lib
+from repro.core.scenario import (AsyncSpec, CommsSpec, DataSpec, ExecSpec,
+                                 FleetSpec, Scenario, TrainSpec)
+
+__all__ = [
+    "Scenario", "DataSpec", "FleetSpec", "TrainSpec", "CommsSpec",
+    "AsyncSpec", "ExecSpec", "RunResult", "SweepResult", "TimeToAccuracy",
+    "run", "run_sweep",
+]
+
+
+class TimeToAccuracy(NamedTuple):
+    """First eval point at/after which accuracy reached the target."""
+    time_s: float
+    energy_j: float
+    round: int
+
+
+@dataclass
+class RunResult:
+    """Typed result of one :func:`run` call.
+
+    Per-eval-point arrays (``round``/``acc``/``loss``/``time_s``/
+    ``energy_j`` — cumulative simulated seconds/joules), run totals,
+    the resolved strategy axes, and host-side timing breakdown.  The
+    async-only telemetry fields (``flushes``/``mean_staleness``) are
+    ``None`` for synchronous strategies."""
+    scenario: Scenario
+    round: np.ndarray          # (E,) int — 1-based eval round/event index
+    acc: np.ndarray            # (E,) f64 test accuracy
+    loss: np.ndarray           # (E,) f64 training loss
+    time_s: np.ndarray         # (E,) f64 cumulative simulated time
+    energy_j: np.ndarray       # (E,) f64 cumulative simulated energy
+    reclusters: int
+    global_rounds: int         # stage-2 aggregations that actually fired
+    strategy: Dict[str, str]   # resolved Strategy axes (registry entry)
+    mesh_shape: Optional[Dict[str, int]]   # None on the single-device path
+    setup_s: float             # host: one-time eager setup
+    compile_s: float           # host: XLA lower+compile of the scan
+    run_s: float               # host: compiled execution + fetch
+    flushes: Optional[int] = None
+    mean_staleness: Optional[float] = None
+
+    # ------------------------------------------------------------------
+    @property
+    def wall_s(self) -> float:
+        """Total host wall-clock: setup + compile + run."""
+        return self.setup_s + self.compile_s + self.run_s
+
+    @property
+    def final_acc(self) -> float:
+        return float(self.acc[-1])
+
+    def time_to_accuracy(self, target: float) -> Optional[TimeToAccuracy]:
+        """First ``(time_s, energy_j, round)`` at which accuracy reached
+        ``target``.  Returns **None** when the target is never reached
+        (callers wanting the legacy sentinel can treat None as
+        time=energy=inf; `fedhc.time_energy_to_accuracy` keeps that
+        convention for history dicts)."""
+        for r, a, t, e in zip(self.round, self.acc, self.time_s,
+                              self.energy_j):
+            if a >= target:
+                return TimeToAccuracy(float(t), float(e), int(r))
+        return None
+
+    def to_history(self) -> Dict[str, list]:
+        """The legacy ``engine.run``-style history dict, bit-identical to
+        what the flat entrypoint returns for ``scenario.to_flat()``."""
+        h: Dict[str, Any] = {
+            "round": [int(r) for r in self.round],
+            "acc": [float(a) for a in self.acc],
+            "loss": [float(x) for x in self.loss],
+            "time_s": [float(t) for t in self.time_s],
+            "energy_j": [float(e) for e in self.energy_j],
+            "reclusters": self.reclusters,
+            "global_rounds": self.global_rounds,
+        }
+        if self.flushes is not None:
+            h["flushes"] = self.flushes
+            h["mean_staleness"] = self.mean_staleness
+        return h
+
+    # ---- persistence ---------------------------------------------------
+    def save(self, path: str) -> None:
+        """JSON result-with-manifest: the exact scenario rides along, so
+        a saved result is reproducible by construction."""
+        d = {
+            "scenario": self.scenario.to_dict(),
+            "history": self.to_history(),
+            "strategy": self.strategy,
+            "mesh_shape": self.mesh_shape,
+            "timings": {"setup_s": self.setup_s,
+                        "compile_s": self.compile_s,
+                        "run_s": self.run_s},
+        }
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(d, f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "RunResult":
+        with open(path) as f:
+            d = json.load(f)
+        h, t = d["history"], d["timings"]
+        return cls(
+            scenario=Scenario.from_dict(d["scenario"]),
+            round=np.asarray(h["round"], np.int64),
+            acc=np.asarray(h["acc"], np.float64),
+            loss=np.asarray(h["loss"], np.float64),
+            time_s=np.asarray(h["time_s"], np.float64),
+            energy_j=np.asarray(h["energy_j"], np.float64),
+            reclusters=h["reclusters"],
+            global_rounds=h["global_rounds"],
+            strategy=d["strategy"],
+            mesh_shape=d["mesh_shape"],
+            setup_s=t["setup_s"], compile_s=t["compile_s"],
+            run_s=t["run_s"],
+            flushes=h.get("flushes"),
+            mean_staleness=h.get("mean_staleness"),
+        )
+
+
+@dataclass
+class SweepResult:
+    """Typed result of :func:`run_sweep`: per-seed per-round arrays of
+    shape ``(num_seeds, rounds)``; mask columns by ``evaluated`` (same
+    cadence every seed) to recover the eval-point history."""
+    scenario: Scenario
+    seeds: np.ndarray          # (S,)
+    acc: np.ndarray            # (S, R) — NaN on non-eval rounds
+    loss: np.ndarray           # (S, R)
+    time_s: np.ndarray         # (S, R)
+    energy_j: np.ndarray       # (S, R)
+    evaluated: np.ndarray      # (S, R) bool
+    reclusters: np.ndarray     # (S,) per-seed totals
+    global_rounds: np.ndarray  # (S,)
+    wall_s: float
+
+    @property
+    def eval_rounds(self) -> np.ndarray:
+        """1-based round indices of the eval points (cadence is identical
+        across seeds)."""
+        return np.nonzero(self.evaluated[0])[0] + 1
+
+    def eval_curves(self, key: str = "acc") -> np.ndarray:
+        """(S, E) per-seed values at the eval points only."""
+        return getattr(self, key)[:, np.nonzero(self.evaluated[0])[0]]
+
+    @property
+    def final_acc(self) -> np.ndarray:
+        """(S,) last-eval-point accuracy per seed."""
+        return self.eval_curves("acc")[:, -1]
+
+
+# --------------------------------------------------------------------------
+# Entry points
+# --------------------------------------------------------------------------
+
+
+# AOT-compiled scan executables, keyed like the engines' _scan_fn caches.
+# AOT (lower+compile) gives RunResult a real compile_s split, but bypasses
+# jit's own executable cache — this dict restores call-to-call reuse, so
+# repeated api.run calls on one scenario (e.g. looping run() over seeds)
+# pay XLA compilation once.  Input avals/shardings are fully determined by
+# the key: setup() is deterministic in shapes for a given (cfg, mesh,
+# client_axes), so a cached executable always matches.
+_COMPILED: Dict[Any, Any] = {}
+
+
+def _resolve_mesh(scenario: Scenario, mesh):
+    """An explicit ``mesh=`` wins; otherwise build one from the ExecSpec
+    (``None`` => single-program, ``0`` => every local device)."""
+    if mesh is not None:
+        return mesh
+    md = scenario.exec.mesh_devices
+    if md is None:
+        return None
+    from repro.launch import mesh as mesh_lib
+    return mesh_lib.make_client_mesh(md or None)
+
+
+def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
+        client_axes=None) -> RunResult:
+    """Run one scenario end-to-end and return a :class:`RunResult`.
+
+    Sync/async/sharded routing is automatic from the scenario's resolved
+    strategy and :class:`ExecSpec`; ``mesh=``/``client_axes=`` override
+    the ExecSpec placement for callers that already hold a mesh.  The
+    trajectory is bit-identical to ``engine.run(scenario.to_flat())``
+    (and the async route to ``async_engine.run``) — same setup, same
+    compiled scan, same history extraction."""
+    from repro.core import engine
+    cfg = scenario.to_flat()
+    strategy = strat_lib.get(cfg.method)
+    if strategy.is_async:
+        from repro.core import async_engine as eng
+    else:
+        eng = engine
+    mesh = _resolve_mesh(scenario, mesh)
+    caxes = engine._resolve_client_axes(
+        mesh, client_axes if client_axes is not None
+        else scenario.exec.client_axes)
+    if mesh is not None and strategy.shardable:
+        from repro.launch import mesh as mesh_lib
+        mesh_lib.validate_client_sharding(mesh, caxes, cfg.num_clients)
+
+    t0 = time.perf_counter()
+    state0, data = eng.setup(cfg, mesh=mesh, client_axes=caxes)
+    jax.block_until_ready((state0, data))
+    setup_s = time.perf_counter() - t0
+
+    # the scan program is seed-independent (the seed is consumed by
+    # setup), so seed-normalize both the cache key and the traced config:
+    # looping run() over seeds — the path run_sweep's errors recommend —
+    # compiles once and occupies ONE _scan_fn lru slot
+    cfg0 = dataclasses.replace(cfg, seed=0)
+    key = (cfg0, mesh, caxes)
+    compiled = _COMPILED.get(key)
+    t0 = time.perf_counter()
+    if compiled is None:
+        fn = eng._scan_fn(cfg0, mesh, caxes)
+        compiled = fn.lower(state0, data).compile()
+        if len(_COMPILED) >= 32:                # same bound as _scan_fn's
+            _COMPILED.pop(next(iter(_COMPILED)))
+        _COMPILED[key] = compiled
+    compile_s = time.perf_counter() - t0        # ~0 on a cache hit
+
+    t0 = time.perf_counter()
+    _, outs = compiled(state0, data)
+    history = eng.history_from_outputs(outs)        # the one transfer
+    run_s = time.perf_counter() - t0
+
+    if verbose:
+        for r, a, l, t, e in zip(history["round"], history["acc"],
+                                 history["loss"], history["time_s"],
+                                 history["energy_j"]):
+            print(f"[{cfg.method}] round {r:5d} acc={a:.3f} loss={l:.3f} "
+                  f"T={t:.0f}s E={e:.1f}J")
+
+    return RunResult(
+        scenario=scenario,
+        round=np.asarray(history["round"], np.int64),
+        acc=np.asarray(history["acc"], np.float64),
+        loss=np.asarray(history["loss"], np.float64),
+        time_s=np.asarray(history["time_s"], np.float64),
+        energy_j=np.asarray(history["energy_j"], np.float64),
+        reclusters=history["reclusters"],
+        global_rounds=history["global_rounds"],
+        strategy=dataclasses.asdict(strategy),
+        mesh_shape=dict(mesh.shape) if mesh is not None else None,
+        setup_s=round(setup_s, 4), compile_s=round(compile_s, 4),
+        run_s=round(run_s, 4),
+        flushes=history.get("flushes"),
+        mean_staleness=history.get("mean_staleness"),
+    )
+
+
+def run_sweep(scenario: Scenario,
+              seeds: Sequence[int]) -> SweepResult:
+    """Multi-seed sweep: ONE compiled vmap over the seed axis
+    (`engine.run_many_seeds`), ``scenario.seed`` ignored in favor of
+    ``seeds``.  Sync single-program strategies only; sliced contact
+    plans are per-seed and therefore rejected — every unsupported
+    combination raises a clear ``ValueError`` before any compilation."""
+    strategy = strat_lib.get(scenario.method)
+    if strategy.is_async:
+        raise ValueError(
+            f"run_sweep is sync-only: {scenario.method!r} uses "
+            f"async-buffered aggregation (vmapping the event scan over "
+            f"seeds is an open ROADMAP item). Loop run() over seeds "
+            f"instead.")
+    # (contact_slices scenarios are rejected by run_many_seeds itself,
+    # before any setup or compilation — one guard, one message)
+    if scenario.exec.mesh_devices is not None:
+        raise ValueError(
+            "run_sweep does not support a client mesh yet "
+            "(run_many_seeds vmaps the single-program scan; sharding the "
+            "seed x client axes is an open ROADMAP item). Set "
+            "ExecSpec(mesh_devices=None), or loop run() over seeds for "
+            "sharded execution.")
+    from repro.core import engine
+    cfg = scenario.to_flat()
+    t0 = time.perf_counter()
+    sweep = engine.run_many_seeds(cfg, seeds)
+    wall_s = time.perf_counter() - t0
+    return SweepResult(
+        scenario=scenario, seeds=sweep["seeds"], acc=sweep["acc"],
+        loss=sweep["loss"], time_s=sweep["time_s"],
+        energy_j=sweep["energy_j"], evaluated=sweep["evaluated"],
+        reclusters=sweep["reclusters"],
+        global_rounds=sweep["global_rounds"], wall_s=round(wall_s, 4))

@@ -521,6 +521,18 @@ def simulate(cfg: FLRunConfig, seed: Optional[int] = None, *,
     return _scan_fn(cfg, mesh, client_axes)(state0, data)
 
 
+def history_from_outputs(outs: AsyncOutput) -> Dict[str, list]:
+    """Host-side history dict from a stacked :class:`AsyncOutput` — the
+    eval-point extraction is shared with the sync engine
+    (`engine.eval_point_lists`), plus the async telemetry totals."""
+    outs, history = engine.eval_point_lists(outs)
+    history["reclusters"] = 0                # static layout by construction
+    history["global_rounds"] = int(np.sum(outs.did_global))
+    history["flushes"] = int(np.sum(outs.flushes))
+    history["mean_staleness"] = float(np.mean(outs.mean_tau))
+    return history
+
+
 def run(cfg: FLRunConfig, verbose: bool = False, *,
         mesh=None, client_axes=None) -> Dict[str, list]:
     """Same history layout as ``engine.run`` (entries at every
@@ -528,20 +540,7 @@ def run(cfg: FLRunConfig, verbose: bool = False, *,
     plus async telemetry: total buffer ``flushes`` and the event-averaged
     ``mean_staleness`` of accepted contributions."""
     final_state, outs = simulate(cfg, mesh=mesh, client_axes=client_axes)
-    outs = jax.device_get(outs)                     # the one transfer
-
-    idx = np.nonzero(np.asarray(outs.evaluated))[0]
-    history: Dict[str, list] = {
-        "round": [int(i) + 1 for i in idx],
-        "acc": [float(outs.acc[i]) for i in idx],
-        "loss": [float(outs.loss[i]) for i in idx],
-        "time_s": [float(outs.time_s[i]) for i in idx],
-        "energy_j": [float(outs.energy_j[i]) for i in idx],
-        "reclusters": 0,                     # static layout by construction
-        "global_rounds": int(np.sum(outs.did_global)),
-        "flushes": int(np.sum(outs.flushes)),
-        "mean_staleness": float(np.mean(outs.mean_tau)),
-    }
+    history = history_from_outputs(outs)            # the one transfer
     if verbose:
         for r, a, l, t, e in zip(history["round"], history["acc"],
                                  history["loss"], history["time_s"],

@@ -598,6 +598,32 @@ def simulate(cfg: FLRunConfig, seed: Optional[int] = None, *,
     return _scan_fn(cfg, mesh, client_axes)(state0, data)
 
 
+def eval_point_lists(outs):
+    """Fetch a stacked output and extract the per-eval-point lists common
+    to both engines (``evaluated``-masked round/acc/loss/time/energy).
+    Returns ``(fetched_outs, partial_history)``; the callers add their
+    own totals.  One extraction, shared by ``run``, the async engine and
+    `repro.api.run` — so every entrypoint is bit-identical by
+    construction."""
+    outs = jax.device_get(outs)
+    idx = np.nonzero(np.asarray(outs.evaluated))[0]
+    return outs, {
+        "round": [int(i) + 1 for i in idx],
+        "acc": [float(outs.acc[i]) for i in idx],
+        "loss": [float(outs.loss[i]) for i in idx],
+        "time_s": [float(outs.time_s[i]) for i in idx],
+        "energy_j": [float(outs.energy_j[i]) for i in idx],
+    }
+
+
+def history_from_outputs(outs: RoundOutput) -> Dict[str, list]:
+    """Host-side history dict from a stacked :class:`RoundOutput`."""
+    outs, history = eval_point_lists(outs)
+    history["reclusters"] = int(np.sum(outs.reclustered))
+    history["global_rounds"] = int(np.sum(outs.did_global))
+    return history
+
+
 def run(cfg: FLRunConfig, verbose: bool = False, *,
         mesh=None, client_axes=None) -> Dict[str, list]:
     """Drop-in replacement for the legacy ``run_fl`` loop: same history
@@ -610,18 +636,7 @@ def run(cfg: FLRunConfig, verbose: bool = False, *,
         return async_engine.run(cfg, verbose=verbose, mesh=mesh,
                                 client_axes=client_axes)
     final_state, outs = simulate(cfg, mesh=mesh, client_axes=client_axes)
-    outs = jax.device_get(outs)                     # the one transfer
-
-    idx = np.nonzero(np.asarray(outs.evaluated))[0]
-    history: Dict[str, list] = {
-        "round": [int(i) + 1 for i in idx],
-        "acc": [float(outs.acc[i]) for i in idx],
-        "loss": [float(outs.loss[i]) for i in idx],
-        "time_s": [float(outs.time_s[i]) for i in idx],
-        "energy_j": [float(outs.energy_j[i]) for i in idx],
-        "reclusters": int(np.sum(outs.reclustered)),
-        "global_rounds": int(np.sum(outs.did_global)),
-    }
+    history = history_from_outputs(outs)            # the one transfer
     if verbose:
         k = 1 if strat_lib.get(cfg.method).centralized else cfg.num_clusters
         for r, a, l, t, e in zip(history["round"], history["acc"],
@@ -652,14 +667,18 @@ def run_many_seeds(cfg: FLRunConfig,
 
     Returns per-round arrays of shape ``(num_seeds, rounds)`` — mask by
     ``evaluated`` to recover the eval-cadence history — plus per-seed
-    re-cluster totals.  (Sliced contact plans are seed-dependent, so the
-    sweep always shares one *full* plan regardless of
-    ``cfg.contact_slices``.)"""
+    re-cluster totals."""
     strategy = strat_lib.get(cfg.method)
     if strategy.is_async:
         raise NotImplementedError(
             "run_many_seeds is sync-only for now; vmap the async engine's "
             "scan directly or loop async_engine.run over seeds")
+    if cfg.contact_slices:
+        raise ValueError(
+            "contact_slices=True is incompatible with run_many_seeds: "
+            "sliced contact plans are seed-dependent (they store routes "
+            "to one seed's PS set), while the sweep shares a single plan "
+            "across the seed axis. Set contact_slices=False for sweeps.")
     plan = _plan_for(cfg, strategy)
     setups = [setup(cfg, int(s), contact_plan=plan) for s in seeds]
     state0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),

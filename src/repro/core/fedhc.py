@@ -56,8 +56,51 @@ from repro.orbits import cost as cost_lib
 from repro.orbits.constellation import Constellation, ground_station_position
 from repro.orbits.links import LinkParams
 
-METHODS = strat_lib.names()   # every registered method (paper five +
-#                               connectivity-gated variants), registry-ordered
+class _MethodsView:
+    """Live, registry-ordered view of every registered method name.
+
+    The old module-level ``METHODS = strat_lib.names()`` was an
+    import-time snapshot that went stale whenever a strategy registered
+    later (benchmarks and tests register variants at runtime).  This view
+    reads the registry on every access, so ``"x" in METHODS``,
+    iteration, ``len`` and indexing always reflect the current registry.
+    Call :func:`methods` (or ``tuple(METHODS)``) for a plain tuple."""
+
+    def _names(self) -> tuple:
+        return strat_lib.names()
+
+    def __iter__(self):
+        return iter(self._names())
+
+    def __len__(self) -> int:
+        return len(self._names())
+
+    def __getitem__(self, i):
+        return self._names()[i]
+
+    def __contains__(self, method) -> bool:
+        return method in self._names()
+
+    def __eq__(self, other):
+        try:
+            return tuple(self) == tuple(other)
+        except TypeError:             # non-iterable: not equal, not an error
+            return NotImplemented
+
+    def __hash__(self):
+        return hash(tuple(self._names()))
+
+    def __repr__(self) -> str:
+        return f"METHODS{self._names()!r}"
+
+
+METHODS = _MethodsView()      # every registered method (paper five +
+#                               connectivity/async variants), live view
+
+
+def methods() -> tuple:
+    """Snapshot of the registered method names (registry-ordered)."""
+    return strat_lib.names()
 
 
 @dataclass(frozen=True)
@@ -102,8 +145,8 @@ class FLRunConfig:
     #                                       of the full (T,N,N) table;
     #                                       needs a static cluster layout
     #                                       (recluster="never") and is
-    #                                       per-seed (run_many_seeds keeps
-    #                                       the full shared plan)
+    #                                       per-seed (run_many_seeds /
+    #                                       api.run_sweep reject it)
     # ---- asynchronous buffered aggregation (strategies with ------------
     # ---- aggregation="async-buffered"; ignored by sync methods) --------
     async_cohort: int = 0                 # clients popped per event
@@ -119,6 +162,14 @@ class FLRunConfig:
     staleness_b: float = 4.0              # hinge grace window (versions)
     server_lr: float = 1.0                # flush mixing rate (1.0 =
     #                                       replace with the buffered agg)
+
+    def to_scenario(self):
+        """The typed :class:`repro.core.scenario.Scenario` equivalent of
+        this flat config (the composable-spec API; `repro.api.run` runs
+        it).  Cross-field validation happens at Scenario construction, so
+        an invalid flat combination raises a clear ``ValueError`` here."""
+        from repro.core.scenario import Scenario
+        return Scenario.from_flat(self)
 
 
 # --------------------------------------------------------------------------
@@ -375,7 +426,11 @@ def run_fl_legacy(cfg: FLRunConfig, verbose: bool = False) -> Dict[str, list]:
 
 
 def time_energy_to_accuracy(history: Dict[str, list], target: float):
-    """First (time, energy) at which accuracy >= target, else (inf, inf)."""
+    """First (time, energy) at which accuracy >= target, else (inf, inf).
+
+    Legacy helper over the history-dict format; the typed equivalent is
+    ``RunResult.time_to_accuracy(target)`` (`repro.api`), which returns
+    ``None`` when the target is never reached."""
     for r, a, t, e in zip(history["round"], history["acc"],
                           history["time_s"], history["energy_j"]):
         if a >= target:

@@ -1,0 +1,148 @@
+"""api.run / RunResult: the Scenario entrypoint must reproduce the legacy
+flat entrypoints BIT-FOR-BIT (sync and async routes), run_sweep must match
+run_many_seeds, and RunResult helpers (time_to_accuracy, save/load,
+to_history) must behave as documented."""
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import (CommsSpec, ExecSpec, FleetSpec, RunResult, Scenario)
+from repro.core import engine
+from repro.core.fedhc import FLRunConfig
+
+
+def _flat(method, **kw):
+    base = dict(method=method, num_clients=16, num_clusters=3, rounds=8,
+                eval_every=4, samples_per_client=32, local_steps=1,
+                batch_size=16, eval_size=128)
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+# ---- parity pins: api.run == legacy entrypoints, bit for bit --------------
+
+
+@pytest.mark.parametrize("method", ["fedhc", "c-fedavg", "fedspace"])
+def test_run_matches_engine_bit_for_bit_sync(method):
+    cfg = _flat(method)
+    res = api.run(Scenario.from_flat(cfg))
+    assert res.to_history() == engine.run(cfg)      # exact, not allclose
+    assert res.flushes is None and res.mean_staleness is None
+    assert res.strategy["name"] == method
+    assert res.mesh_shape is None
+
+
+def test_run_matches_async_engine_bit_for_bit():
+    from repro.core import async_engine
+    cfg = _flat("fedhc-async", async_cohort=4, async_buffer=4)
+    res = api.run(Scenario.from_flat(cfg))
+    assert res.to_history() == async_engine.run(cfg)
+    assert res.flushes >= 1
+    assert res.strategy["aggregation"] == "async-buffered"
+
+
+def test_run_sweep_matches_run_many_seeds():
+    cfg = _flat("h-base", rounds=6, eval_every=3)
+    seeds = (0, 1)
+    sweep = api.run_sweep(Scenario.from_flat(cfg), seeds)
+    ref = engine.run_many_seeds(cfg, seeds)
+    np.testing.assert_array_equal(sweep.acc, ref["acc"])
+    np.testing.assert_array_equal(sweep.time_s, ref["time_s"])
+    np.testing.assert_array_equal(sweep.evaluated, ref["evaluated"])
+    np.testing.assert_array_equal(sweep.reclusters, ref["reclusters"])
+    assert sweep.eval_rounds.tolist() == [3, 6]
+    assert sweep.final_acc.shape == (2,)
+
+
+def test_run_reuses_compiled_executable():
+    """Two api.run calls on one scenario compile once (the AOT executable
+    is cached per (cfg, mesh, client_axes), like the engines' _scan_fn)."""
+    sc = Scenario.from_flat(_flat("h-base", rounds=5, eval_every=5))
+    r1 = api.run(sc)
+    r2 = api.run(sc)
+    assert r1.to_history() == r2.to_history()
+    assert r2.compile_s < max(0.05, r1.compile_s / 10)   # cache hit
+    # the program is seed-independent: a new seed must hit the cache too
+    r3 = api.run(sc.replace(seed=sc.seed + 1))
+    assert r3.compile_s < max(0.05, r1.compile_s / 10)
+    assert r3.to_history() != r1.to_history()            # but new data
+
+
+def test_run_sweep_rejects_mesh():
+    sc = Scenario.from_flat(_flat("h-base")).replace(
+        exec=ExecSpec(mesh_devices=0))
+    with pytest.raises(ValueError, match="mesh"):
+        api.run_sweep(sc, (0, 1))
+
+
+def test_run_sweep_rejects_async_and_slices():
+    with pytest.raises(ValueError, match="sync-only"):
+        api.run_sweep(Scenario.from_flat(_flat("fedbuff")), (0, 1))
+    sliced = Scenario(method="fedspace",
+                      fleet=FleetSpec(num_clients=16, num_clusters=3),
+                      comms=CommsSpec(contact_slices=True))
+    with pytest.raises(ValueError, match="contact_slices"):
+        api.run_sweep(sliced, (0, 1))
+    # same guard on the flat path (clear error, not a deep trace failure)
+    with pytest.raises(ValueError, match="contact_slices"):
+        engine.run_many_seeds(sliced.to_flat(), (0, 1))
+
+
+# ---- RunResult helpers ----------------------------------------------------
+
+
+def _result(**kw):
+    base = dict(
+        scenario=Scenario(), round=np.array([5, 10]),
+        acc=np.array([0.3, 0.8]), loss=np.array([2.0, 1.0]),
+        time_s=np.array([5.0, 9.0]), energy_j=np.array([1.0, 2.0]),
+        reclusters=0, global_rounds=2, strategy={"name": "fedhc"},
+        mesh_shape=None, setup_s=0.1, compile_s=0.2, run_s=0.3)
+    base.update(kw)
+    return RunResult(**base)
+
+
+def test_time_to_accuracy_reached():
+    tta = _result().time_to_accuracy(0.5)
+    assert tta == (9.0, 2.0, 10)
+    assert tta.round == 10 and tta.time_s == 9.0 and tta.energy_j == 2.0
+    # first eval point already qualifies
+    assert _result().time_to_accuracy(0.1).round == 5
+
+
+def test_time_to_accuracy_never_reached_returns_none():
+    """Documented contract: None (not inf, not an exception) when the
+    target accuracy is never reached."""
+    assert _result().time_to_accuracy(0.9) is None
+    assert _result(acc=np.array([np.nan, np.nan])).time_to_accuracy(
+        0.1) is None
+
+
+def test_wall_s_and_final_acc():
+    r = _result()
+    assert r.wall_s == pytest.approx(0.6)
+    assert r.final_acc == pytest.approx(0.8)
+
+
+def test_save_load_roundtrip(tmp_path):
+    cfg = _flat("fedbuff", async_cohort=4, async_buffer=4)
+    res = api.run(Scenario.from_flat(cfg))
+    p = str(tmp_path / "nested" / "result.json")
+    res.save(p)                       # creates the parent dir
+    loaded = RunResult.load(p)
+    assert loaded.scenario == res.scenario
+    assert loaded.to_history() == res.to_history()
+    assert loaded.strategy == res.strategy
+    assert loaded.flushes == res.flushes
+
+
+def test_exec_spec_drives_pallas_routing():
+    """ExecSpec.use_pallas_kernels reaches the flat config (the scan hot
+    path honors it); trajectories stay allclose to the jnp path."""
+    sc = Scenario.from_flat(_flat("h-base", rounds=4, eval_every=2))
+    sc_k = sc.replace(exec=ExecSpec(use_pallas_kernels=True))
+    assert sc_k.to_flat().use_pallas_kernels
+    # kernel-vs-jnp bit parity is pinned in tests/test_kernels.py; here we
+    # only check the routing produces an equivalent learning trajectory
+    np.testing.assert_allclose(api.run(sc_k).loss, api.run(sc).loss,
+                               rtol=1e-3, atol=1e-4)

@@ -1,0 +1,174 @@
+"""Scenario spec: JSON round-trip exactness across every registered
+strategy, flat-config adapter inversion, construction-time cross-field
+validation, and the live METHODS registry view."""
+import dataclasses
+
+import pytest
+
+from repro.core import staleness as stale_lib
+from repro.core import strategies as strat_lib
+from repro.core.fedhc import METHODS, FLRunConfig, methods
+from repro.core.scenario import (AsyncSpec, CommsSpec, DataSpec, ExecSpec,
+                                 FleetSpec, Scenario, TrainSpec)
+from repro.data.synthetic import CIFAR_LIKE, DatasetSpec
+
+
+def _scenario_for(method: str) -> Scenario:
+    """A non-default scenario exercising every sub-config for ``method``
+    (async strategies get async knobs; visibility-gated ones get comms)."""
+    strategy = strat_lib.get(method)
+    return Scenario(
+        method=method, seed=3,
+        data=DataSpec(dataset=CIFAR_LIKE, samples_per_client=48,
+                      dirichlet_alpha=0.3, eval_size=256),
+        fleet=FleetSpec(num_clients=24, num_clusters=3,
+                        dropout_threshold=0.4, round_minutes=2.0),
+        train=TrainSpec(rounds=12, rounds_per_global=3, local_steps=1,
+                        batch_size=32, lr=0.02, eval_every=4,
+                        maml_alpha=2e-3, maml_beta=5e-4),
+        comms=CommsSpec(contact_dt_s=30.0, gs_min_elevation_deg=5.0,
+                        isl_max_range_km=6000.0, isl_max_hops=6,
+                        contact_dtype="bfloat16",
+                        contact_slices=not strategy.reclusters
+                        and strategy.visibility_gated),
+        async_=AsyncSpec(cohort=6, buffer=4, staleness="hinge",
+                         staleness_a=0.3, staleness_b=2.0,
+                         server_lr=0.5) if strategy.is_async
+        else AsyncSpec(),
+        exec=ExecSpec(mesh_devices=None, client_axes=("clients",),
+                      use_pallas_kernels=True),
+    )
+
+
+# ---- JSON round-trip across EVERY registered strategy ---------------------
+
+
+@pytest.mark.parametrize("method", strat_lib.names())
+def test_json_roundtrip_exact(method):
+    s = _scenario_for(method)
+    assert Scenario.from_json(s.to_json()) == s
+    # compact form too (no indent)
+    assert Scenario.from_json(s.to_json(indent=None)) == s
+
+
+def test_json_roundtrip_default_scenario():
+    s = Scenario()
+    s2 = Scenario.from_json(s.to_json())
+    assert s2 == s
+    assert s2.data.dataset == s.data.dataset   # DatasetSpec reconstructed
+
+
+def test_json_roundtrip_custom_dataset():
+    ds = DatasetSpec("weird", img=12, channels=2, num_classes=7,
+                     template_scale=1.25, noise_scale=0.125)
+    s = Scenario(data=DataSpec(dataset=ds))
+    assert Scenario.from_json(s.to_json()).data.dataset == ds
+
+
+# ---- flat-config adapter --------------------------------------------------
+
+
+@pytest.mark.parametrize("method", strat_lib.names())
+def test_flat_adapter_roundtrip(method):
+    s = _scenario_for(method)
+    cfg = s.to_flat()
+    assert isinstance(cfg, FLRunConfig)
+    # ExecSpec placement has no flat counterpart beyond use_pallas_kernels
+    s2 = Scenario.from_flat(cfg, client_axes=("clients",))
+    assert s2 == s
+    assert s2.to_flat() == cfg
+    assert cfg.to_scenario().to_flat() == cfg
+
+
+def test_from_flat_defaults_match():
+    """Scenario() and FLRunConfig() describe the same experiment."""
+    assert Scenario() == Scenario.from_flat(FLRunConfig())
+    assert Scenario().to_flat() == FLRunConfig()
+
+
+# ---- construction-time cross-field validation -----------------------------
+
+
+def test_unknown_method_rejected():
+    with pytest.raises(ValueError, match="unknown FL strategy"):
+        Scenario(method="not-a-method")
+
+
+def test_contact_slices_with_recluster_rejected():
+    with pytest.raises(ValueError, match="contact_slices"):
+        Scenario(method="fedhc", comms=CommsSpec(contact_slices=True))
+    with pytest.raises(ValueError, match="contact_slices"):
+        Scenario.from_flat(FLRunConfig(method="fedhc-nomaml",
+                                       contact_slices=True))
+    # static-layout strategies may slice
+    Scenario(method="fedspace", comms=CommsSpec(contact_slices=True))
+
+
+def test_async_cohort_bounds_rejected():
+    with pytest.raises(ValueError, match="cohort"):
+        Scenario(method="fedbuff", fleet=FleetSpec(num_clients=8),
+                 async_=AsyncSpec(cohort=16))
+    # 0 = full-cohort sync limit: valid
+    Scenario(method="fedbuff", fleet=FleetSpec(num_clients=8),
+             async_=AsyncSpec(cohort=0))
+
+
+def test_mesh_divisibility_rejected():
+    with pytest.raises(ValueError, match="not divisible"):
+        Scenario(method="fedhc", fleet=FleetSpec(num_clients=10),
+                 exec=ExecSpec(mesh_devices=4))
+    Scenario(method="fedhc", fleet=FleetSpec(num_clients=12),
+             exec=ExecSpec(mesh_devices=4))
+
+
+def test_clusters_exceed_clients_rejected():
+    with pytest.raises(ValueError, match="num_clusters"):
+        Scenario(method="fedhc",
+                 fleet=FleetSpec(num_clients=4, num_clusters=8))
+    # centralized methods force K=1, so the knob is inert
+    Scenario(method="c-fedavg",
+             fleet=FleetSpec(num_clients=4, num_clusters=8))
+
+
+def test_subspec_scalar_validation():
+    with pytest.raises(ValueError, match="staleness"):
+        AsyncSpec(staleness="not-a-schedule")
+    with pytest.raises(ValueError, match="contact_dtype"):
+        CommsSpec(contact_dtype="int8")
+    with pytest.raises(ValueError, match="rounds"):
+        TrainSpec(rounds=0)
+    with pytest.raises(ValueError, match="num_clients"):
+        FleetSpec(num_clients=0)
+    with pytest.raises(ValueError, match="server_lr"):
+        AsyncSpec(server_lr=0.0)
+    assert AsyncSpec().staleness in stale_lib.names()
+
+
+def test_replace_revalidates():
+    s = Scenario(method="fedspace",
+                 comms=CommsSpec(contact_slices=True))
+    with pytest.raises(ValueError, match="contact_slices"):
+        s.replace(method="fedhc")
+
+
+# ---- live METHODS view ----------------------------------------------------
+
+
+def test_methods_is_live_view_of_registry():
+    assert tuple(METHODS) == strat_lib.names() == methods()
+    assert "fedhc" in METHODS and "nope" not in METHODS
+    assert len(METHODS) == len(strat_lib.names())
+    assert METHODS[0] == strat_lib.names()[0]
+    name = "test-live-view-strategy"
+    assert name not in METHODS
+    strat_lib.register(dataclasses.replace(strat_lib.get("h-base"),
+                                           name=name))
+    try:
+        # the view reflects the late registration without re-import
+        assert name in METHODS
+        assert tuple(METHODS) == strat_lib.names()
+        # ...and the Scenario validator accepts the new method
+        Scenario(method=name)
+    finally:
+        strat_lib._REGISTRY.pop(name)
+    assert name not in METHODS
