@@ -78,6 +78,9 @@ class RunResult:
     run_s: float               # host: compiled execution + fetch
     flushes: Optional[int] = None
     mean_staleness: Optional[float] = None
+    peak_device_mem_mb: Optional[float] = None  # device 0 peak allocation
+    #                            (jax memory_stats; None on backends that
+    #                             don't report, e.g. CPU)
 
     # ------------------------------------------------------------------
     @property
@@ -129,7 +132,8 @@ class RunResult:
             "mesh_shape": self.mesh_shape,
             "timings": {"setup_s": self.setup_s,
                         "compile_s": self.compile_s,
-                        "run_s": self.run_s},
+                        "run_s": self.run_s,
+                        "peak_device_mem_mb": self.peak_device_mem_mb},
         }
         parent = os.path.dirname(path)
         if parent:
@@ -157,6 +161,7 @@ class RunResult:
             run_s=t["run_s"],
             flushes=h.get("flushes"),
             mean_staleness=h.get("mean_staleness"),
+            peak_device_mem_mb=t.get("peak_device_mem_mb"),
         )
 
 
@@ -207,6 +212,27 @@ class SweepResult:
 _COMPILED: Dict[Any, Any] = {}
 
 
+def _peak_device_mem_mb() -> Optional[float]:
+    """Device-0 peak allocation in MB, or None when the backend does not
+    report memory stats (CPU returns None; some platforms raise)."""
+    try:
+        stats = jax.local_devices()[0].memory_stats()
+    except Exception:
+        return None
+    if not stats:
+        return None
+    peak = stats.get("peak_bytes_in_use")
+    return None if peak is None else round(float(peak) / 1e6, 3)
+
+
+def _setup_cache_key(cfg, mesh, caxes):
+    """Setup is independent of the execution-only knobs (microbatch,
+    Pallas routing) — normalize those away so benchmark grid cells that
+    vary only execution share one cached setup."""
+    return (dataclasses.replace(cfg, client_microbatch=0,
+                                use_pallas_kernels=False), mesh, caxes)
+
+
 def _resolve_mesh(scenario: Scenario, mesh):
     """An explicit ``mesh=`` wins; otherwise build one from the ExecSpec
     (``None`` => single-program, ``0`` => every local device)."""
@@ -220,7 +246,8 @@ def _resolve_mesh(scenario: Scenario, mesh):
 
 
 def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
-        client_axes=None) -> RunResult:
+        client_axes=None,
+        setup_cache: Optional[Dict[Any, Any]] = None) -> RunResult:
     """Run one scenario end-to-end and return a :class:`RunResult`.
 
     Sync/async/sharded routing is automatic from the scenario's resolved
@@ -228,7 +255,15 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
     the ExecSpec placement for callers that already hold a mesh.  The
     trajectory is bit-identical to ``engine.run(scenario.to_flat())``
     (and the async route to ``async_engine.run``) — same setup, same
-    compiled scan, same history extraction."""
+    compiled scan, same history extraction.
+
+    ``setup_cache``: pass any dict (owned by the caller) to reuse the
+    eager setup — dataset, model init, clustering, contact plan, device
+    placement — across calls that differ only in execution knobs
+    (microbatch, Pallas routing).  A hit reports ``setup_s ~ 0``.  Safe
+    because the compiled scan never donates or mutates its inputs.
+    Benchmarks sweeping variants at fixed N (`benchmarks/scale_bench.py`)
+    use this to pay the ~10 s setup once per grid column."""
     from repro.core import engine
     cfg = scenario.to_flat()
     strategy = strat_lib.get(cfg.method)
@@ -245,8 +280,15 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
         mesh_lib.validate_client_sharding(mesh, caxes, cfg.num_clients)
 
     t0 = time.perf_counter()
-    state0, data = eng.setup(cfg, mesh=mesh, client_axes=caxes)
-    jax.block_until_ready((state0, data))
+    skey = (_setup_cache_key(cfg, mesh, caxes)
+            if setup_cache is not None else None)
+    if skey is not None and skey in setup_cache:
+        state0, data = setup_cache[skey]
+    else:
+        state0, data = eng.setup(cfg, mesh=mesh, client_axes=caxes)
+        jax.block_until_ready((state0, data))
+        if skey is not None:
+            setup_cache[skey] = (state0, data)
     setup_s = time.perf_counter() - t0
 
     # the scan program is seed-independent (the seed is consumed by
@@ -292,6 +334,7 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
         run_s=round(run_s, 4),
         flushes=history.get("flushes"),
         mean_staleness=history.get("mean_staleness"),
+        peak_device_mem_mb=_peak_device_mem_mb(),
     )
 
 

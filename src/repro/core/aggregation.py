@@ -34,14 +34,26 @@ def tree_weighted_sum(stack, weights):
     return jax.tree_util.tree_map(one, stack)
 
 
+def membership_one_hot(assignment: jnp.ndarray, k: int) -> jnp.ndarray:
+    """The (C, K) f32 cluster-membership matrix every aggregation stage
+    keys on.  Callers on the round hot path compute it ONCE and pass it
+    to ``cluster_weights``/``cluster_aggregate``/``global_round`` via
+    their ``one_hot=`` argument instead of materializing it three times
+    per round (identical numerics; smaller traced graph, and at
+    mega-constellation C x K a few fewer MB of transients)."""
+    return jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+
+
 def loss_weights(losses: jnp.ndarray, assignment: jnp.ndarray, k: int,
-                 participating: Optional[jnp.ndarray] = None) -> jnp.ndarray:
+                 participating: Optional[jnp.ndarray] = None,
+                 one_hot: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """Eq. 12: p_i = (1/L_i) / sum_{j in cluster(i)} (1/L_j), masked by
     participation, normalized within each cluster.  Returns (C,)."""
     inv = 1.0 / jnp.maximum(losses.astype(jnp.float32), 1e-8)
     if participating is not None:
         inv = inv * participating.astype(jnp.float32)
-    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)    # (C,K)
+    if one_hot is None:
+        one_hot = membership_one_hot(assignment, k)               # (C,K)
     denom = one_hot.T @ inv                                       # (K,)
     return inv / jnp.maximum(denom[assignment], 1e-12)
 
@@ -56,7 +68,8 @@ def data_weights(data_sizes: jnp.ndarray,
 
 
 def cluster_aggregate(stack, weights: jnp.ndarray, assignment: jnp.ndarray,
-                      k: int, *, use_pallas: bool = False):
+                      k: int, *, use_pallas: bool = False,
+                      one_hot: Optional[jnp.ndarray] = None):
     """Stage 1: per-cluster weighted average.
 
     stack: pytree (C, ...); weights (C,) already normalized per cluster
@@ -68,7 +81,8 @@ def cluster_aggregate(stack, weights: jnp.ndarray, assignment: jnp.ndarray,
     one pass over the stack, with the one-hot mask folded into the
     (C, K) weight matrix; semantics are identical (parity-pinned against
     this jnp path in ``tests/test_kernels.py``)."""
-    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)    # (C,K)
+    if one_hot is None:
+        one_hot = membership_one_hot(assignment, k)               # (C,K)
     wm = one_hot * weights.astype(jnp.float32)[:, None]           # (C,K)
 
     if use_pallas:
@@ -101,7 +115,8 @@ def broadcast_global(tree, num_clients: int):
 def hierarchical_round(stack, losses, data_sizes, assignment, k,
                        participating=None, *, do_global: bool,
                        loss_weighted: bool = True,
-                       use_pallas: bool = False):
+                       use_pallas: bool = False,
+                       one_hot=None):
     """One full FedHC aggregation: stage-1 always; stage-2 when
     ``do_global``.  Non-participating clients keep their local model for
     stage-1 output weighting but receive the aggregate (they re-sync when
@@ -109,35 +124,43 @@ def hierarchical_round(stack, losses, data_sizes, assignment, k,
 
     Returns the new (C, ...) client-model stack."""
     C = losses.shape[0]
+    if one_hot is None:
+        one_hot = membership_one_hot(assignment, k)
     w = cluster_weights(losses, data_sizes, assignment, k, participating,
-                        loss_weighted=loss_weighted)
+                        loss_weighted=loss_weighted, one_hot=one_hot)
     cluster_models = cluster_aggregate(stack, w, assignment, k,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas, one_hot=one_hot)
 
     if do_global:
-        return global_round(cluster_models, data_sizes, assignment, k, C)
+        return global_round(cluster_models, data_sizes, assignment, k, C,
+                            one_hot=one_hot)
     return broadcast_clusters(cluster_models, assignment)
 
 
 def cluster_weights(losses, data_sizes, assignment, k, participating=None,
-                    *, loss_weighted: bool = True) -> jnp.ndarray:
+                    *, loss_weighted: bool = True,
+                    one_hot: Optional[jnp.ndarray] = None) -> jnp.ndarray:
     """The stage-1 per-client weight vector: Eq. 12 inverse-loss weights
     or per-cluster FedAvg data-size weights, both cluster-normalized."""
     if loss_weighted:
-        return loss_weights(losses, assignment, k, participating)
+        return loss_weights(losses, assignment, k, participating,
+                            one_hot=one_hot)
     d = data_sizes.astype(jnp.float32)
     if participating is not None:
         d = d * participating.astype(jnp.float32)
-    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+    if one_hot is None:
+        one_hot = membership_one_hot(assignment, k)
     denom = one_hot.T @ d
     return d / jnp.maximum(denom[assignment], 1e-12)
 
 
-def global_round(cluster_models, data_sizes, assignment, k, num_clients):
+def global_round(cluster_models, data_sizes, assignment, k, num_clients,
+                 *, one_hot: Optional[jnp.ndarray] = None):
     """Stage 2 from stage-1 outputs: data-size-weighted ground-station
     aggregation of the (K, ...) cluster models, broadcast to every
     client."""
-    one_hot = jax.nn.one_hot(assignment, k, dtype=jnp.float32)
+    if one_hot is None:
+        one_hot = membership_one_hot(assignment, k)
     dk = one_hot.T @ data_sizes.astype(jnp.float32)               # (K,)
     g = global_aggregate(cluster_models, dk)
     return broadcast_global(g, num_clients)

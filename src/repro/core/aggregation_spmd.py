@@ -63,14 +63,20 @@ def hierarchical_round_sharded(stack, losses, data_sizes, assignment, k,
     path (the constraint is simply not emitted).
     """
     num_clients = losses.shape[0]
+    # One (C, K) membership matrix shared by all three stages of the
+    # round instead of three identical materializations (numerics
+    # unchanged — same op, computed once).
+    one_hot = agg.membership_one_hot(assignment, k)
     w = agg.cluster_weights(losses, data_sizes, assignment, k,
-                            participating, loss_weighted=loss_weighted)
+                            participating, loss_weighted=loss_weighted,
+                            one_hot=one_hot)
     cluster_models = agg.cluster_aggregate(stack, w, assignment, k,
-                                           use_pallas=use_pallas)
+                                           use_pallas=use_pallas,
+                                           one_hot=one_hot)
     out = jax.lax.cond(
         do_global,
         lambda cm: agg.global_round(cm, data_sizes, assignment, k,
-                                    num_clients),
+                                    num_clients, one_hot=one_hot),
         lambda cm: agg.broadcast_clusters(cm, assignment),
         cluster_models)
     if shardings is not None:
@@ -106,11 +112,12 @@ def buffered_flush_sharded(contrib_stack, losses, data_sizes, assignment, k,
     is the same segment matmul over the (possibly client-sharded) C dim,
     so under a mesh XLA lowers it to grouped collectives; the (K, ...)
     output is replicated (K is tiny)."""
+    one_hot = agg.membership_one_hot(assignment, k)
     w = agg.cluster_weights(losses, data_sizes, assignment, k,
                             participating=contrib_w,
-                            loss_weighted=loss_weighted)
+                            loss_weighted=loss_weighted, one_hot=one_hot)
     new_models = agg.cluster_aggregate(contrib_stack, w, assignment, k,
-                                       use_pallas=use_pallas)
+                                       use_pallas=use_pallas, one_hot=one_hot)
     if server_lr != 1.0:
         new_models = jax.tree_util.tree_map(
             lambda new, old: old + server_lr * (new - old),

@@ -319,9 +319,12 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                                             data.client_idx, r_rnd,
                                             cfg.batch_size)
                 imgs, labs = shard_clients(imgs), shard_clients(labs)
-                trained, l_new = _local_train(state.work_params, imgs, labs,
-                                              lr=cfg.lr,
-                                              steps=cfg.local_steps)
+                trained, l_new = _local_train(
+                    state.work_params, imgs, labs, lr=cfg.lr,
+                    steps=cfg.local_steps,
+                    microbatch=cfg.client_microbatch,
+                    client_shards=(shard_rules.axis_size(mesh, caxes)
+                                   if sharded else 1))
                 trained = shard_stack(trained)
                 losses = shard_clients(l_new)
             else:
@@ -336,8 +339,11 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                 imgs, labs = data.images[flat_c], data.labels[flat_c]
                 base = jax.tree_util.tree_map(lambda x: x[cohort_idx],
                                               state.work_params)
+                # cohort stacks are gather products with no pinned layout,
+                # so the microbatch scan uses the unsharded decomposition
                 trained, l_c = _local_train(base, imgs, labs, lr=cfg.lr,
-                                            steps=cfg.local_steps)
+                                            steps=cfg.local_steps,
+                                            microbatch=cfg.client_microbatch)
                 losses = shard_clients(state.losses.at[cohort_idx].set(l_c))
 
             # ---- 3. contribute (per-client-clock gated, staleness-weighted)

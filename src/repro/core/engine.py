@@ -161,9 +161,25 @@ def _plan_for(cfg: FLRunConfig, strategy: strat_lib.Strategy,
     if not strategy.visibility_gated:
         return None
     if cluster_slices is not None and strategy.reclusters:
-        raise ValueError("contact_slices=True requires a static cluster "
-                         "layout (recluster='never'): a sliced plan only "
-                         "stores routes to the build-time PS set")
+        raise ValueError("contact_slices/contact_factorized require a "
+                         "static cluster layout (recluster='never'): the "
+                         "plan only covers the build-time PS set")
+    if cfg.contact_factorized:
+        if strategy.is_async:
+            raise ValueError(
+                "contact_factorized=True is sync-engine-only: the async "
+                "engine looks routes up at per-client clocks, which would "
+                "recompute the relaxation once per client (store the plan "
+                "instead: contact_slices=True)")
+        if cfg.contact_slices:
+            raise ValueError("contact_slices and contact_factorized are "
+                             "mutually exclusive storage layouts")
+        return contact_lib.build_factorized_plan(
+            _constellation_for(cfg.num_clients), LinkParams(),
+            dt_s=cfg.contact_dt_s,
+            min_elevation_deg=cfg.gs_min_elevation_deg,
+            max_range_km=cfg.isl_max_range_km, max_hops=cfg.isl_max_hops,
+            cluster_slices=cluster_slices)
     return contact_lib.build_contact_plan(
         _constellation_for(cfg.num_clients), LinkParams(),
         dt_s=cfg.contact_dt_s,
@@ -204,7 +220,12 @@ def _data_shardings(cfg: FLRunConfig, strategy: strat_lib.Strategy,
         row = (shard_rules.client_spec(mesh, caxes, cfg.num_clients)
                if strategy.shardable else P())
         row_sh = NamedSharding(mesh, P(None, *row))
-        if isinstance(data.plan, contact_lib.ClusterContactPlan):
+        if isinstance(data.plan, contact_lib.FactorizedContactPlan):
+            # nothing big to shard: the plan is O(N) generator inputs
+            # (time grid + cluster layout); the recomputed per-round
+            # slices get their layout from GSPMD propagation
+            plan_sh = jax.tree_util.tree_map(lambda _: repl, data.plan)
+        elif isinstance(data.plan, contact_lib.ClusterContactPlan):
             plan_sh = contact_lib.ClusterContactPlan(
                 times=repl, gs_visible=row_sh, gs_dist_km=row_sh,
                 tpb_to_ps=row_sh,
@@ -238,6 +259,34 @@ def _place(cfg: FLRunConfig, strategy: strat_lib.Strategy,
     state_sh = state_sh._replace(params=param_sh)
     data_sh = _data_shardings(cfg, strategy, data, mesh, caxes)
     return jax.device_put(state0, state_sh), jax.device_put(data, data_sh)
+
+
+def _broadcast_client_stack(w0, num_clients: int, mesh, caxes):
+    """Per-host sharded build of the (C, ...) client parameter stack:
+    ``broadcast_global`` without ever materializing the full stack on any
+    host.  Each leaf is handed to ``jax.make_array_from_process_local_data``
+    as a zero-copy ``np.broadcast_to`` view (stride-0 leading dim), so the
+    host-side footprint stays O(model) while the device shards land
+    directly under their NamedSharding — at N=10k the host never holds
+    the ~1.7 GB stack the host-0 broadcast path would allocate.  In a
+    multi-process mesh each process feeds only its addressable portion."""
+    mesh_lib.validate_client_sharding(mesh, caxes, num_clients)
+    stack_shapes = jax.eval_shape(
+        lambda w: agg.broadcast_global(w, num_clients), w0)
+    pspecs = shard_rules.tree_param_specs(
+        stack_shapes, mesh, client_axes=caxes, client_stacked=True)
+    shardings = shard_rules.tree_shardings(pspecs, mesh)
+
+    local_rows = mesh_lib.process_local_client_rows(num_clients)
+
+    def build(leaf, sharding):
+        global_shape = (num_clients,) + leaf.shape
+        view = np.broadcast_to(np.asarray(leaf)[None],
+                               (local_rows,) + leaf.shape)
+        return jax.make_array_from_process_local_data(
+            sharding, view, global_shape)
+
+    return jax.tree_util.tree_map(build, w0, shardings)
 
 
 def setup(cfg: FLRunConfig, seed: Optional[int] = None,
@@ -283,21 +332,27 @@ def setup(cfg: FLRunConfig, seed: Optional[int] = None,
     assignment0, centroids0 = init_fn(r_kmeans, pos0, hists, k)
     ps_index0 = _ps_of(pos0, centroids0, assignment0, k)
 
-    params0 = (w0 if strategy.centralized
-               else agg.broadcast_global(w0, cfg.num_clients))
+    caxes = _resolve_client_axes(mesh, client_axes)
+    if strategy.centralized:
+        params0 = w0
+    elif mesh is not None and strategy.shardable:
+        # per-host sharded build: no host materializes the full stack
+        params0 = _broadcast_client_stack(w0, cfg.num_clients, mesh, caxes)
+    else:
+        params0 = agg.broadcast_global(w0, cfg.num_clients)
     state0 = RoundState(params0, assignment0.astype(jnp.int32), centroids0,
                         ps_index0, r_loop, jnp.float32(0.0),
                         jnp.float32(0.0), jnp.int32(0), jnp.bool_(False))
     # one-time eager build; the compiled rounds only gather from it
+    # (the factorized plan instead re-derives its slices in-scan)
     slices = ((assignment0.astype(jnp.int32), ps_index0)
-              if cfg.contact_slices else None)
+              if (cfg.contact_slices or cfg.contact_factorized) else None)
     plan = (contact_plan if contact_plan is not None
             else _plan_for(cfg, strategy, cluster_slices=slices))
     data = SimData(images, labels, test_x, test_y, client_idx, data_sizes,
                    freqs, r_kmeans, plan)
     if mesh is not None:
-        state0, data = _place(cfg, strategy, state0, data, mesh,
-                              _resolve_client_axes(mesh, client_axes))
+        state0, data = _place(cfg, strategy, state0, data, mesh, caxes)
     return state0, data
 
 
@@ -410,8 +465,10 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
             if strategy.visibility_gated:
                 # contact-plan gathers: who can route to whom *right now*
                 # (a cluster-sliced plan stores member->PS and PS-row
-                # routes directly; a full plan derives the same slices)
-                if isinstance(data.plan, contact_lib.ClusterContactPlan):
+                # routes directly; a factorized plan recomputes the same
+                # tuple from geometry; a full plan derives the slices)
+                if isinstance(data.plan, (contact_lib.ClusterContactPlan,
+                                          contact_lib.FactorizedContactPlan)):
                     gs_vis, gs_dist, tpb_to_ps, ps_rows = \
                         contact_lib.lookup_sliced(data.plan, state.t_sim)
                 else:
@@ -449,8 +506,11 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                 do_global = cadence_due
                 pending_next = state.pending_global    # stays False
 
-            params, losses = _local_train(state.params, imgs, labs,
-                                          lr=cfg.lr, steps=cfg.local_steps)
+            params, losses = _local_train(
+                state.params, imgs, labs, lr=cfg.lr, steps=cfg.local_steps,
+                microbatch=cfg.client_microbatch,
+                client_shards=(shard_rules.axis_size(mesh, caxes)
+                               if sharded else 1))
             params = shard_params(params)
             losses = shard_clients(losses)
             # the merged aggregation formulation: oracle math + sharding
@@ -673,12 +733,13 @@ def run_many_seeds(cfg: FLRunConfig,
         raise NotImplementedError(
             "run_many_seeds is sync-only for now; vmap the async engine's "
             "scan directly or loop async_engine.run over seeds")
-    if cfg.contact_slices:
+    if cfg.contact_slices or cfg.contact_factorized:
         raise ValueError(
-            "contact_slices=True is incompatible with run_many_seeds: "
-            "sliced contact plans are seed-dependent (they store routes "
-            "to one seed's PS set), while the sweep shares a single plan "
-            "across the seed axis. Set contact_slices=False for sweeps.")
+            "contact_slices/contact_factorized are incompatible with "
+            "run_many_seeds: both plan forms are seed-dependent (they "
+            "bake in one seed's cluster layout), while the sweep shares "
+            "a single plan across the seed axis. Use the full stored "
+            "plan for sweeps.")
     plan = _plan_for(cfg, strategy)
     setups = [setup(cfg, int(s), contact_plan=plan) for s in seeds]
     state0 = jax.tree_util.tree_map(lambda *xs: jnp.stack(xs),

@@ -147,6 +147,24 @@ class FLRunConfig:
     #                                       (recluster="never") and is
     #                                       per-seed (run_many_seeds /
     #                                       api.run_sweep reject it)
+    contact_factorized: bool = False      # store NO routes: recompute the
+    #                                       member->PS + PS-row slices
+    #                                       inside the scan from orbital
+    #                                       geometry (O(N) plan storage;
+    #                                       orbits/contact.
+    #                                       FactorizedContactPlan).  Same
+    #                                       static-layout + per-seed
+    #                                       limits as contact_slices, and
+    #                                       sync-engine only (the async
+    #                                       per-client clocks would need
+    #                                       one recompute per client)
+    client_microbatch: int = 0            # scan local training over client
+    #                                       sub-blocks of this size instead
+    #                                       of one (C, ...) vmap — caps
+    #                                       activation memory so clients-
+    #                                       per-device can climb past 100
+    #                                       (0 = full vmap; bit-identical
+    #                                       either way)
     # ---- asynchronous buffered aggregation (strategies with ------------
     # ---- aggregation="async-buffered"; ignored by sync methods) --------
     async_cohort: int = 0                 # clients popped per event
@@ -175,8 +193,28 @@ class FLRunConfig:
 # --------------------------------------------------------------------------
 
 
-def _local_train(params_stack, images, labels, lr, steps):
-    """vmap over clients: `steps` SGD steps each.  Returns (params, loss)."""
+def _local_train(params_stack, images, labels, lr, steps, *,
+                 microbatch: int = 0, client_shards: int = 1):
+    """Per-client local SGD: `steps` steps each.  Returns (params, loss).
+
+    ``microbatch=0`` (default) vmaps over the whole (C, ...) stack at
+    once.  ``microbatch=m`` instead scans over ceil(C/m)-many m-client
+    sub-blocks, each block a vmap — the same math in the same order, so
+    the results are bit-identical for any ``m >= 2`` (``m=1`` hits XLA's
+    degenerate-batch convolution codepath: ulp-level drift), while peak
+    activation memory drops from O(C * acts) to O(m * acts).  At paper scale the full-vmap im2col
+    activations blow the cache (the superlinear per-round term in
+    `benchmarks/scale_bench.py`); microbatching restores linear scaling
+    and is what lets clients-per-device climb past 100.
+
+    Under client-axis SPMD pass ``client_shards=S`` (the client-axis
+    size): each scan block then takes m/S clients from EVERY shard —
+    reshape/transpose moves that stay device-local — so all S devices
+    stay busy every block.  That decomposition needs ``m % S == 0`` and
+    ``(C/S) % (m/S) == 0`` (raised here otherwise; `core/scenario.py`
+    validates the same at construction).  Unsharded, a non-divisor
+    remainder is handled by wrap-padding the last block (duplicate work,
+    discarded — results stay exact)."""
 
     def one_client(p, imgs, labs):
         def body(p, _):
@@ -186,7 +224,50 @@ def _local_train(params_stack, images, labels, lr, steps):
         p, losses = jax.lax.scan(body, p, None, length=steps)
         return p, losses[-1]
 
-    return jax.vmap(one_client)(params_stack, images, labels)
+    c = images.shape[0]
+    mb, s = int(microbatch), max(1, int(client_shards))
+    if not mb or mb >= c:
+        return jax.vmap(one_client)(params_stack, images, labels)
+
+    if s > 1:
+        if mb % s or (c // s) % (mb // s):
+            raise ValueError(
+                f"client_microbatch={mb} does not decompose device-locally "
+                f"over {s} client shards: need microbatch % shards == 0 "
+                f"and (num_clients//shards) % (microbatch//shards) == 0 "
+                f"(num_clients={c})")
+        nb, lmb = c // mb, mb // s
+
+        def to_blocks(x):
+            x = x.reshape((s, nb, lmb) + x.shape[1:])
+            x = jnp.swapaxes(x, 0, 1)                # (nb, s, lmb, ...)
+            return x.reshape((nb, mb) + x.shape[3:])
+
+        def from_blocks(x):
+            x = x.reshape((nb, s, lmb) + x.shape[2:])
+            x = jnp.swapaxes(x, 0, 1)                # (s, nb, lmb, ...)
+            return x.reshape((c,) + x.shape[3:])
+    else:
+        nb = -(-c // mb)
+        n_pad = nb * mb - c
+
+        def to_blocks(x):
+            if n_pad:
+                x = jnp.concatenate([x, x[:n_pad]], axis=0)
+            return x.reshape((nb, mb) + x.shape[1:])
+
+        def from_blocks(x):
+            return x.reshape((nb * mb,) + x.shape[2:])[:c]
+
+    def block_step(_, xs):
+        p, i, l = xs
+        return None, jax.vmap(one_client)(p, i, l)
+
+    _, (p, losses) = jax.lax.scan(
+        block_step, None,
+        (jax.tree_util.tree_map(to_blocks, params_stack),
+         to_blocks(images), to_blocks(labels)))
+    return jax.tree_util.tree_map(from_blocks, p), from_blocks(losses)
 
 
 def _meta_update_clusters(cluster_models, assignment, images, labels, *,

@@ -146,6 +146,13 @@ class CommsSpec:
     #                                   slices instead of the full (T,N,N)
     #                                   table; needs a static cluster
     #                                   layout and is per-seed
+    contact_factorized: bool = False  # store no routes at all: recompute
+    #                                   the slices in-scan from orbital
+    #                                   geometry (O(N) plan storage;
+    #                                   `orbits/contact.
+    #                                   FactorizedContactPlan`).  Same
+    #                                   static-layout + per-seed limits as
+    #                                   contact_slices; sync-engine only
 
     def __post_init__(self):
         _require(self.contact_dt_s > 0,
@@ -202,12 +209,22 @@ class ExecSpec:
     use_pallas_kernels: bool = False  # route the scan hot path through
     #                                   the Pallas kmeans/weighted-agg
     #                                   kernels
+    client_microbatch: int = 0        # scan local training over client
+    #                                   sub-blocks of this size (caps
+    #                                   activation memory; 0 = one full
+    #                                   vmap over all clients).  Under a
+    #                                   mesh the block must decompose
+    #                                   device-locally (cross-field check
+    #                                   in Scenario.__post_init__)
 
     def __post_init__(self):
         if self.mesh_devices is not None:
             _require(self.mesh_devices >= 0,
                      f"mesh_devices={self.mesh_devices} must be >= 0 "
                      f"(0 = every local device) or None (no mesh)")
+        _require(self.client_microbatch >= 0,
+                 f"client_microbatch={self.client_microbatch} must be "
+                 f">= 0 (0 = full vmap)")
         if self.client_axes is not None and not isinstance(
                 self.client_axes, tuple):
             object.__setattr__(self, "client_axes",
@@ -266,6 +283,39 @@ class Scenario:
                 f"only stores routes to the build-time PS set "
                 f"(recluster='never' required)")
 
+        # ---- factorized contact plans: static layout, sync-only ---------
+        if self.comms.contact_factorized:
+            if self.comms.contact_slices:
+                raise ValueError(
+                    "contact_slices and contact_factorized are mutually "
+                    "exclusive contact-plan storage layouts")
+            if strategy.reclusters:
+                raise ValueError(
+                    f"contact_factorized=True is incompatible with the "
+                    f"re-clustering strategy {self.method!r}: the "
+                    f"factorized plan bakes in the build-time cluster "
+                    f"layout (recluster='never' required)")
+            if strategy.is_async:
+                raise ValueError(
+                    f"contact_factorized=True is sync-engine-only "
+                    f"({self.method!r} is async): per-client-clock "
+                    f"lookups would recompute the route relaxation once "
+                    f"per client — use contact_slices for async methods")
+
+        # ---- microbatch must decompose device-locally under a mesh ------
+        mb = self.exec.client_microbatch
+        md_ = self.exec.mesh_devices
+        if (mb and md_ and strategy.shardable
+                and mb < self.fleet.num_clients):
+            if mb % md_ or (self.fleet.num_clients // md_) % (mb // md_):
+                raise ValueError(
+                    f"client_microbatch={mb} does not decompose "
+                    f"device-locally over mesh_devices={md_}: need "
+                    f"microbatch % mesh_devices == 0 and "
+                    f"(num_clients//mesh_devices) % "
+                    f"(microbatch//mesh_devices) == 0 "
+                    f"(num_clients={self.fleet.num_clients})")
+
         # ---- async cross-checks (engine._statics, moved up front) -------
         if strategy.is_async:
             c = self.fleet.num_clients
@@ -323,6 +373,8 @@ class Scenario:
             isl_max_hops=self.comms.isl_max_hops,
             contact_dtype=self.comms.contact_dtype,
             contact_slices=self.comms.contact_slices,
+            contact_factorized=self.comms.contact_factorized,
+            client_microbatch=self.exec.client_microbatch,
             async_cohort=self.async_.cohort,
             async_buffer=self.async_.buffer,
             staleness=self.async_.staleness,
@@ -368,7 +420,8 @@ class Scenario:
                 isl_max_range_km=cfg.isl_max_range_km,
                 isl_max_hops=cfg.isl_max_hops,
                 contact_dtype=cfg.contact_dtype,
-                contact_slices=cfg.contact_slices),
+                contact_slices=cfg.contact_slices,
+                contact_factorized=cfg.contact_factorized),
             async_=AsyncSpec(
                 cohort=cfg.async_cohort,
                 buffer=cfg.async_buffer,
@@ -379,7 +432,8 @@ class Scenario:
             exec=ExecSpec(
                 mesh_devices=mesh_devices,
                 client_axes=client_axes,
-                use_pallas_kernels=cfg.use_pallas_kernels),
+                use_pallas_kernels=cfg.use_pallas_kernels,
+                client_microbatch=cfg.client_microbatch),
         )
 
     # ---- JSON round-trip (reproducible benchmark manifests) -----------

@@ -72,6 +72,23 @@ def validate_client_sharding(mesh, client_axes, num_clients: int) -> None:
             f"shrink the client axes.")
 
 
+def process_local_client_rows(num_clients: int) -> int:
+    """How many rows of a (C, ...) client-stacked array this process
+    feeds to ``jax.make_array_from_process_local_data`` during per-host
+    sharded setup (`core/engine.py`).  jax lays host-local shards out
+    contiguously per process for a 1-D client mesh, so each of the P
+    processes contributes C/P consecutive rows; validate divisibility
+    here so a ragged multi-host launch fails loudly at setup instead of
+    mis-assembling the global array."""
+    p = jax.process_count()
+    if num_clients % p:
+        raise ValueError(
+            f"num_clients={num_clients} is not divisible by the "
+            f"process count {p}: per-host sharded setup needs each "
+            f"process to contribute an equal block of client rows")
+    return num_clients // p
+
+
 def client_axes_for(mesh, client_axis: str, num_clients: Optional[int] = None):
     """Mesh axes over which FL clients are laid out.  Pass ``num_clients``
     to validate divisibility (raises instead of silently mis-sharding)."""

@@ -20,7 +20,7 @@ approximation (Earth rotates ~28 deg per 1300 km-orbit period, which
 shifts window phases but not their statistics).
 
 Storage: the (T, N, N) ``isl_tpb`` route table dominates the footprint
-(~1.5 GB at N=800 / dt=10 s in f32).  Two independent reducers:
+(~1.5 GB at N=800 / dt=10 s in f32).  Three independent reducers:
 
 * ``storage_dtype=bfloat16`` halves it (values only; reachability is
   bit-identical — bf16 keeps f32's exponent range, so inf survives);
@@ -32,10 +32,22 @@ Storage: the (T, N, N) ``isl_tpb`` route table dominates the footprint
   consensus).  Storing just those — (T, N) + (T, K, N) — instead of the
   full (T, N, N) cuts the table ~N/(K+1)-fold (~17 MB at N=800 / K=8 /
   dt=10 s), and the slicing happens *inside* the per-sample build scan,
-  so the full table is never materialized even transiently.
+  so the full table is never materialized even transiently;
+* **factorization** (:class:`FactorizedContactPlan`): store no routes at
+  all — only the orbital elements, link parameters and cluster layout —
+  and recompute the per-round slices *inside* the scan from the carried
+  clock (positions O(N), GS visibility O(N), PS routes by blocked
+  K-source relaxation, `orbits/topology.route_rows_time_per_bit`).  The
+  plan is O(N) storage independent of the horizon, the one-per-round
+  recompute is memory-linear in N, and the engine consumes it through
+  the same ``lookup_sliced`` interface as the sliced plan.  At
+  mega-constellation scale recompute beats storage: a 10k-satellite /
+  dt=10 s sliced plan would still hold (T, K, N) ~ 3.7 GB of routes.
 """
 from __future__ import annotations
 
+import functools
+from dataclasses import dataclass
 from typing import NamedTuple, Optional, Tuple
 
 import jax
@@ -71,6 +83,83 @@ class ClusterContactPlan(NamedTuple):
     gs_dist_km: jnp.ndarray  # (T, N) f32
     tpb_to_ps: jnp.ndarray   # (T, N) member -> its PS route s/bit
     ps_rows: jnp.ndarray     # (T, K, N) PS -> every sat route s/bit
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=("times", "assignment", "ps_index"),
+    meta_fields=("constellation", "link_params", "gs_lat_deg", "gs_lon_deg",
+                 "min_elevation_deg", "max_range_km", "max_hops",
+                 "col_block"))
+@dataclass(frozen=True)
+class FactorizedContactPlan:
+    """Storage-free contact plan: the *generator* of the sliced plan's
+    rows instead of the rows themselves.
+
+    Holds only the time grid, the static cluster layout and the (static,
+    hashable) geometry/link parameters; :func:`lookup_sliced` recomputes
+    the per-round ``(gs_visible, gs_dist_km, tpb_to_ps, ps_rows)`` tuple
+    from the carried simulation clock, inside the compiled scan.  The
+    time grid is snapped exactly like the stored plans', so visibility
+    and distances are bit-identical to a stored plan's gathers; route
+    values agree to float-associativity (the relaxation sums hop weights
+    in a different order than the closure's squaring) with an exactly
+    matching inf/finite reachability pattern.
+
+    ``tpb_to_ps`` comes from the PS rows by symmetry (the one-hop weight
+    matrix is symmetric, so member->PS and PS->member route costs
+    coincide).  Like the sliced plan this requires a static cluster
+    layout, and it is seed-dependent (the layout is baked in).  The
+    async engine's per-client-clock lookups would need one routing
+    recompute per distinct client clock, so the factorized form is
+    sync-engine-only (`route_to_ps_per_client` raises)."""
+    times: jnp.ndarray           # (T,) f32 snapped sample grid (s)
+    assignment: jnp.ndarray      # (N,) int32 static cluster id
+    ps_index: jnp.ndarray        # (K,) int32 static PS satellites
+    constellation: "Constellation"
+    link_params: "LinkParams"
+    gs_lat_deg: float
+    gs_lon_deg: float
+    min_elevation_deg: float
+    max_range_km: float
+    max_hops: int
+    col_block: int               # routing column-block width (0 = auto)
+
+
+def build_factorized_plan(constellation: Constellation,
+                          lp: Optional[LinkParams] = None, *,
+                          dt_s: float = 60.0,
+                          horizon_s: Optional[float] = None,
+                          gs_lat_deg: float = 30.0,
+                          gs_lon_deg: float = 114.0,
+                          min_elevation_deg: float = 10.0,
+                          max_range_km: float = 8000.0,
+                          max_hops: int = 8,
+                          cluster_slices: Tuple[jnp.ndarray,
+                                                jnp.ndarray] = None,
+                          col_block: int = 0) -> FactorizedContactPlan:
+    """The factorized counterpart of ``build_contact_plan(...,
+    cluster_slices=...)``: same snapped time grid, no sampling pass at
+    all — building is O(N) (it just records the generator inputs)."""
+    lp = lp or LinkParams()
+    if cluster_slices is None:
+        raise ValueError("build_factorized_plan needs cluster_slices="
+                         "(assignment, ps_index): the recomputed routes "
+                         "are the static cluster layout's slices")
+    assignment, ps_index = cluster_slices
+    horizon = constellation.period_s if horizon_s is None else horizon_s
+    n_samples = max(1, int(round(horizon / dt_s)))
+    dt = horizon / n_samples
+    times = jnp.arange(n_samples, dtype=jnp.float32) * jnp.float32(dt)
+    return FactorizedContactPlan(
+        times=times,
+        assignment=jnp.asarray(assignment, jnp.int32),
+        ps_index=jnp.asarray(ps_index, jnp.int32),
+        constellation=constellation, link_params=lp,
+        gs_lat_deg=float(gs_lat_deg), gs_lon_deg=float(gs_lon_deg),
+        min_elevation_deg=float(min_elevation_deg),
+        max_range_km=float(max_range_km), max_hops=int(max_hops),
+        col_block=int(col_block))
 
 
 def build_contact_plan(constellation: Constellation,
@@ -164,15 +253,38 @@ def lookup(plan: ContactPlan, t_sim: jnp.ndarray
     return plan.gs_visible[idx], plan.gs_dist_km[idx], _f32(plan.isl_tpb[idx])
 
 
-def lookup_sliced(plan: ClusterContactPlan, t_sim: jnp.ndarray
+def lookup_sliced(plan, t_sim: jnp.ndarray
                   ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray,
                              jnp.ndarray]:
-    """Scalar-time lookup on a cluster-sliced plan: returns
+    """Scalar-time lookup on a cluster-sliced OR factorized plan: returns
     ``(gs_visible (N,), gs_dist_km (N,), tpb_to_ps (N,), ps_rows (K,N))``
-    — exactly the gathers the static-layout engine paths consume."""
+    — exactly the gathers the static-layout engine paths consume.  A
+    sliced plan gathers stored rows; a factorized plan recomputes the
+    same tuple from geometry at the snapped sample time."""
+    if isinstance(plan, FactorizedContactPlan):
+        return _lookup_factorized(plan, t_sim)
     idx = _sample_index(plan, t_sim)
     return (plan.gs_visible[idx], plan.gs_dist_km[idx],
             _f32(plan.tpb_to_ps[idx]), _f32(plan.ps_rows[idx]))
+
+
+def _lookup_factorized(plan: FactorizedContactPlan, t_sim: jnp.ndarray):
+    """Recompute the sliced-plan tuple at the snapped sample time.  Pure
+    jnp: positions O(N), visibility O(N), PS routes by the blocked
+    K-source relaxation — O(N * col_block) peak memory, no (N, N) or
+    (T, ...) buffer anywhere."""
+    t = plan.times[_sample_index(plan, t_sim)]     # snap: parity w/ stored
+    pos = plan.constellation.positions(t)
+    gs = ground_station_position(lat_deg=plan.gs_lat_deg,
+                                 lon_deg=plan.gs_lon_deg, t_s=t)
+    vis = visible(pos, gs, plan.min_elevation_deg)
+    dist = jnp.linalg.norm(pos - gs[None, :], axis=-1).astype(jnp.float32)
+    ps_rows = topology.route_rows_time_per_bit(
+        pos, plan.ps_index, plan.link_params, plan.max_range_km,
+        plan.max_hops, col_block=plan.col_block)
+    # member -> own-PS cost by symmetry of the one-hop weight matrix
+    tpb_to_ps = ps_rows[plan.assignment, jnp.arange(pos.shape[0])]
+    return vis, dist, tpb_to_ps, ps_rows
 
 
 def route_to_ps_per_client(plan, t_clients: jnp.ndarray,
@@ -182,6 +294,12 @@ def route_to_ps_per_client(plan, t_clients: jnp.ndarray,
     (inf = no route at that member's clock).  Works on both plan kinds;
     ``ps_of_member`` is ignored for :class:`ClusterContactPlan` (the
     slice already encodes the member -> PS map it was built with)."""
+    if isinstance(plan, FactorizedContactPlan):
+        raise NotImplementedError(
+            "per-client-clock routing on a FactorizedContactPlan would "
+            "recompute the route relaxation once per distinct client "
+            "clock; use a stored (full or sliced) plan for the async "
+            "engine")
     idx = _sample_index(plan, t_clients)                        # (N,)
     i = jnp.arange(t_clients.shape[0])
     if isinstance(plan, ClusterContactPlan):

@@ -21,10 +21,17 @@ through it:
 * :func:`route_time_per_bit` — the quantity the cost model consumes:
   seconds-per-bit of the best ``<= max_hops`` ISL route between every
   satellite pair (``inf`` when no route exists), with edge weights
-  ``1 / rate_bps`` from the paper's link model.
+  ``1 / rate_bps`` from the paper's link model;
+* :func:`route_rows_time_per_bit` — the K-source form the factorized
+  contact plan (`orbits/contact.FactorizedContactPlan`) recomputes inside
+  the round scan: only the ``sources`` rows of the closure, by ``max_hops``
+  Bellman-Ford relaxations ``r <- r (min,+) w`` with the one-hop weight
+  matrix regenerated in column blocks — peak memory O(N * block) instead
+  of O(N^2), so routing stays memory-linear at mega-constellation N.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.orbits import links as links_lib
@@ -93,6 +100,83 @@ def min_plus_closure(w: jnp.ndarray, max_hops: int) -> jnp.ndarray:
         if e:
             base = _min_plus_mul(base, base)
     return result
+
+
+def _segment_min_dist_two(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(N,3),(B,3) -> (N,B): min distance of the segment a_i -> b_j to the
+    geocenter — the two-set form of :func:`segment_min_dist_to_origin`
+    (bit-identical to its (i, j) entries when ``b`` is ``a``)."""
+    ab = b[None, :, :] - a[:, None, :]                   # (N,B,3)
+    denom = jnp.maximum(jnp.sum(ab * ab, axis=-1), 1e-12)
+    t = jnp.clip(-jnp.sum(a[:, None, :] * ab, axis=-1) / denom, 0.0, 1.0)
+    closest = a[:, None, :] + t[..., None] * ab
+    return jnp.linalg.norm(closest, axis=-1)
+
+
+def _one_hop_tpb_cols(positions: jnp.ndarray, col_pos: jnp.ndarray,
+                      col_ids: jnp.ndarray, lp: links_lib.LinkParams,
+                      max_range_km: float,
+                      body_radius_km: float) -> jnp.ndarray:
+    """Columns ``col_ids`` of the reflexive one-hop weight matrix: 0 on the
+    diagonal, ``1/rate`` where an ISL exists, inf elsewhere.  ``col_ids``
+    >= N mark padding columns (all inf).  (N, B)."""
+    n = positions.shape[0]
+    d = jnp.linalg.norm(positions[:, None, :] - col_pos[None, :, :], axis=-1)
+    los = _segment_min_dist_two(positions, col_pos) >= body_radius_km
+    same = jnp.arange(n, dtype=col_ids.dtype)[:, None] == col_ids[None, :]
+    valid = (col_ids < n)[None, :]
+    adj = los & (d <= max_range_km) & ~same & valid
+    w = jnp.where(adj, links_lib.time_per_bit(d, lp), jnp.inf)
+    return jnp.where(same & valid, 0.0, w)
+
+
+def route_rows_time_per_bit(positions: jnp.ndarray, sources: jnp.ndarray,
+                            lp: links_lib.LinkParams, max_range_km: float,
+                            max_hops: int,
+                            body_radius_km: float = R_EARTH_KM,
+                            col_block: int = 0) -> jnp.ndarray:
+    """Rows ``sources`` of the bounded-hop route closure, memory-linear.
+
+    Returns (S, N) f32 seconds-per-bit of the best ``<= max_hops`` ISL
+    route from each source satellite to everyone — the same quantity as
+    ``route_time_per_bit(...)[sources]`` — WITHOUT materializing the
+    (N, N) weight matrix: ``max_hops`` Bellman-Ford relaxations
+    ``r <- r (min,+) w`` (``w`` is reflexive, so step ``h`` admits exactly
+    the ``<= h``-hop routes), with the one-hop columns regenerated from
+    geometry per block.  Peak memory is O(N * col_block); the trade is
+    recomputing the O(N^2) one-hop geometry once per relaxation step.
+
+    Values match the closure to ~1e-6 relative (min-plus path sums
+    associate differently than squaring) and the inf/finite reachability
+    pattern matches exactly.  ``col_block=0`` picks a heuristic: one block
+    for N <= 2048, 1024-wide blocks beyond."""
+    n = positions.shape[0]
+    sources = jnp.asarray(sources, jnp.int32)
+    if not col_block:
+        col_block = n if n <= 2048 else 1024
+    block = min(int(col_block), n)
+    nb = -(-n // block)
+    pad = nb * block - n
+    # padding rows sit at the geocenter: occluded from every satellite,
+    # and masked out by the column-index guard regardless
+    col_pos = (jnp.concatenate(
+        [positions, jnp.zeros((pad, 3), positions.dtype)], axis=0)
+        if pad else positions)
+    col_ids = jnp.arange(nb * block, dtype=jnp.int32).reshape(nb, block)
+
+    def relax(r, _):
+        def block_min(ids):
+            wb = _one_hop_tpb_cols(positions, col_pos[ids], ids, lp,
+                                   max_range_km, body_radius_km)
+            return jnp.min(r[:, :, None] + wb[None, :, :], axis=1)  # (S,B)
+        out = jax.lax.map(block_min, col_ids)                   # (nb,S,B)
+        r_new = jnp.moveaxis(out, 0, 1).reshape(r.shape[0], nb * block)
+        return r_new[:, :n], None
+
+    r0 = jnp.where(sources[:, None] == jnp.arange(n)[None, :],
+                   jnp.float32(0.0), jnp.float32(jnp.inf))
+    r, _ = jax.lax.scan(relax, r0, None, length=max(1, int(max_hops)))
+    return r
 
 
 def hop_counts(adj: jnp.ndarray, max_hops: int) -> jnp.ndarray:

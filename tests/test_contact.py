@@ -247,3 +247,91 @@ def test_route_to_ps_per_client_keys_each_row_by_its_own_time():
         even = np.arange(n) % 2 == 0
         np.testing.assert_array_equal(got[even], want_a[even])
         np.testing.assert_array_equal(got[~even], want_b[~even])
+
+
+# ---- factorized plans (routes recomputed in-scan, nothing stored) ---------
+
+
+def _factorized_pair(dt_s=300.0, k=3, col_block=0):
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    n = c.num_sats
+    assignment = jnp.asarray(np.arange(n) % k, jnp.int32)
+    ps_index = jnp.asarray([1, 9, 17], jnp.int32)[:k]
+    stored = C.build_contact_plan(c, LinkParams(), dt_s=dt_s,
+                                  cluster_slices=(assignment, ps_index))
+    fact = C.build_factorized_plan(c, LinkParams(), dt_s=dt_s,
+                                   cluster_slices=(assignment, ps_index),
+                                   col_block=col_block)
+    return c, stored, fact
+
+
+def test_factorized_matches_stored_sliced_plan():
+    """lookup_sliced on a FactorizedContactPlan reproduces the stored
+    sliced plan: visibility bit-identical, distances to fusion rounding,
+    routes to float-associativity with the exact inf pattern."""
+    c, stored, fact = _factorized_pair()
+    assert isinstance(fact, C.FactorizedContactPlan)
+    np.testing.assert_array_equal(np.asarray(fact.times),
+                                  np.asarray(stored.times))
+    for t in (0.0, 601.0, float(c.period_s) + 300.0):
+        vis_s, dist_s, to_ps_s, rows_s = C.lookup_sliced(
+            stored, jnp.float32(t))
+        vis_f, dist_f, to_ps_f, rows_f = C.lookup_sliced(
+            fact, jnp.float32(t))
+        np.testing.assert_array_equal(np.asarray(vis_f), np.asarray(vis_s))
+        np.testing.assert_allclose(np.asarray(dist_f), np.asarray(dist_s),
+                                   rtol=1e-5)
+        for got, want in ((to_ps_f, to_ps_s), (rows_f, rows_s)):
+            got, want = np.asarray(got), np.asarray(want)
+            finite = np.isfinite(want)
+            np.testing.assert_array_equal(np.isfinite(got), finite)
+            np.testing.assert_allclose(got[finite], want[finite],
+                                       rtol=1e-5)
+
+
+def test_factorized_col_blocking_is_bit_identical():
+    """The blocked-columns relaxation (peak-memory knob) must not change
+    a single bit vs the unblocked one, including a non-divisor block."""
+    _, _, full = _factorized_pair(col_block=0)
+    for cb in (7, 8, 32):
+        _, _, blocked = _factorized_pair(col_block=cb)
+        for t in (0.0, 900.0):
+            ref = C.lookup_sliced(full, jnp.float32(t))
+            got = C.lookup_sliced(blocked, jnp.float32(t))
+            for a, b in zip(ref, got):
+                np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_factorized_stores_no_route_tables():
+    """The whole point: O(N) storage vs the sliced plan's O(T*K*N)."""
+    import jax
+    _, stored, fact = _factorized_pair()
+    stored_bytes = stored.tpb_to_ps.nbytes + stored.ps_rows.nbytes
+    fact_bytes = (fact.times.nbytes + fact.assignment.nbytes
+                  + fact.ps_index.nbytes)
+    assert fact_bytes < stored_bytes / 10
+    leaves = jax.tree_util.tree_leaves(fact)
+    assert max(leaf.ndim for leaf in leaves) == 1   # no matrices at all
+
+
+def test_factorized_is_a_pytree_jit_constant():
+    """The plan must flow through jit/scan closures like the stored ones
+    do (register_dataclass: arrays are leaves, geometry is static)."""
+    import jax
+    _, _, fact = _factorized_pair()
+    f = jax.jit(lambda p, t: C.lookup_sliced(p, t)[0])
+    ref = C.lookup_sliced(fact, jnp.float32(600.0))[0]
+    np.testing.assert_array_equal(np.asarray(f(fact, jnp.float32(600.0))),
+                                  np.asarray(ref))
+
+
+def test_factorized_requires_layout_and_rejects_per_client_clocks():
+    import pytest
+    c = Constellation(num_planes=4, sats_per_plane=8)
+    with pytest.raises(ValueError, match="cluster_slices"):
+        C.build_factorized_plan(c, LinkParams(), dt_s=300.0)
+    _, _, fact = _factorized_pair()
+    n = c.num_sats
+    with pytest.raises(NotImplementedError):
+        C.route_to_ps_per_client(fact, jnp.zeros((n,)),
+                                 jnp.zeros((n,), jnp.int32))

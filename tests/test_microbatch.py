@@ -1,0 +1,111 @@
+"""Microbatched local training (`ExecSpec.client_microbatch`): the scan
+over client sub-blocks must reproduce the full-vmap path exactly — at the
+`_local_train` level for divisors AND non-divisor remainders, through the
+sync engine's trajectory, and through the async engine's cohort path.
+`m=1` is the documented exception (XLA's degenerate-batch convolution
+codepath drifts by ulps) and is pinned with a tolerance instead."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import async_engine, engine
+from repro.core.fedhc import FLRunConfig, _local_train
+from repro.data.synthetic import MNIST_LIKE, make_dataset
+from repro.models.lenet import init_lenet
+
+C, S = 16, 24          # clients, samples per client
+
+
+def _stack_and_data(seed=0):
+    rngs = jax.random.split(jax.random.PRNGKey(seed), C + 1)
+    params = jax.vmap(init_lenet)(rngs[:C])
+    images, labels = make_dataset(rngs[C], MNIST_LIKE, C * S)
+    images = images.reshape((C, S) + images.shape[1:])
+    labels = labels.reshape((C, S))
+    return params, images, labels
+
+
+def _trees_equal(a, b):
+    return all(bool((x == y).all())
+               for x, y in zip(jax.tree_util.tree_leaves(a),
+                               jax.tree_util.tree_leaves(b)))
+
+
+@pytest.mark.parametrize("mb", [2, 3, 5, 8, 16, 24])
+def test_local_train_microbatch_is_bit_identical(mb):
+    """Divisors (2, 8), non-divisor remainders (3, 5), the whole stack
+    (16) and an oversized block (24) all reproduce full-vmap bit-for-bit."""
+    params, images, labels = _stack_and_data()
+    ref_p, ref_l = _local_train(params, images, labels, lr=0.05, steps=2)
+    got_p, got_l = _local_train(params, images, labels, lr=0.05, steps=2,
+                                microbatch=mb)
+    assert _trees_equal(ref_p, got_p)
+    np.testing.assert_array_equal(np.asarray(ref_l), np.asarray(got_l))
+
+
+def test_local_train_microbatch_one_is_close_not_exact():
+    """m=1 routes each client through XLA's degenerate-batch conv path:
+    ulp drift is expected, anything beyond rounding noise is a bug."""
+    params, images, labels = _stack_and_data()
+    ref_p, ref_l = _local_train(params, images, labels, lr=0.05, steps=2)
+    got_p, got_l = _local_train(params, images, labels, lr=0.05, steps=2,
+                                microbatch=1)
+    np.testing.assert_allclose(np.asarray(got_l), np.asarray(ref_l),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree_util.tree_leaves(ref_p),
+                    jax.tree_util.tree_leaves(got_p)):
+        np.testing.assert_allclose(np.asarray(b), np.asarray(a),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_local_train_sharded_decomposition_is_bit_identical():
+    """client_shards=S reorders the blocks device-locally (each block
+    takes m/S clients from every shard); on one device that permutation
+    round-trips exactly."""
+    params, images, labels = _stack_and_data()
+    ref = _local_train(params, images, labels, lr=0.05, steps=1)
+    got = _local_train(params, images, labels, lr=0.05, steps=1,
+                       microbatch=8, client_shards=4)
+    assert _trees_equal(ref[0], got[0])
+    np.testing.assert_array_equal(np.asarray(ref[1]), np.asarray(got[1]))
+
+
+def test_local_train_rejects_non_decomposable_shard_microbatch():
+    params, images, labels = _stack_and_data()
+    with pytest.raises(ValueError, match="client_microbatch"):
+        _local_train(params, images, labels, lr=0.05, steps=1,
+                     microbatch=6, client_shards=4)      # 6 % 4 != 0
+    with pytest.raises(ValueError, match="client_microbatch"):
+        _local_train(params, images, labels, lr=0.05, steps=1,
+                     microbatch=12, client_shards=4)     # 4 % 3 != 0
+
+
+def _cfg(**kw):
+    base = dict(method="fedhc", num_clients=C, num_clusters=3, rounds=8,
+                rounds_per_global=4, eval_every=4, samples_per_client=S,
+                local_steps=2, batch_size=8, eval_size=128)
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+@pytest.mark.parametrize("mb", [5, 8])
+def test_engine_trajectory_is_microbatch_invariant(mb):
+    """The full scan-compiled run — training, aggregation, re-clustering,
+    eval — must not see the microbatch knob at all (5 exercises the
+    wrap-padded remainder inside the round loop)."""
+    ref = engine.run(_cfg())
+    got = engine.run(_cfg(client_microbatch=mb))
+    assert ref == got
+
+
+def test_async_cohort_path_is_microbatch_invariant():
+    """The async engine microbatches the gathered cohort (no mesh layout
+    to respect there): event trajectory must be unchanged."""
+    base = dict(method="fedbuff", async_cohort=8, async_buffer=4,
+                rounds=12)
+    ref = async_engine.run(_cfg(**base))
+    got = async_engine.run(_cfg(**base, client_microbatch=4))
+    assert ref == got

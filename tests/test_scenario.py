@@ -172,3 +172,47 @@ def test_methods_is_live_view_of_registry():
     finally:
         strat_lib._REGISTRY.pop(name)
     assert name not in METHODS
+
+
+def test_contact_factorized_validation():
+    """Factorized plans bake in a static layout (no reclustering), store
+    nothing (exclusive with slices), and are sync-engine-only."""
+    with pytest.raises(ValueError, match="mutually exclusive"):
+        Scenario(method="fedspace",
+                 comms=CommsSpec(contact_slices=True,
+                                 contact_factorized=True))
+    with pytest.raises(ValueError, match="re-clustering"):
+        Scenario(method="fedhc", comms=CommsSpec(contact_factorized=True))
+    with pytest.raises(ValueError, match="sync-engine-only"):
+        Scenario(method="fedbuff",
+                 comms=CommsSpec(contact_factorized=True))
+    # static-layout sync strategies may factorize
+    Scenario(method="fedspace", comms=CommsSpec(contact_factorized=True))
+
+
+def test_contact_factorized_flat_roundtrip():
+    s = Scenario(method="fedspace",
+                 comms=CommsSpec(contact_factorized=True))
+    assert s.to_flat().contact_factorized is True
+    assert Scenario.from_flat(s.to_flat()) == s
+
+
+def test_client_microbatch_validation_and_roundtrip():
+    with pytest.raises(ValueError, match="client_microbatch"):
+        ExecSpec(client_microbatch=-1)
+    # unsharded: any positive value is fine, divisor or not
+    s = Scenario(method="fedhc", exec=ExecSpec(client_microbatch=5))
+    assert s.to_flat().client_microbatch == 5
+    assert Scenario.from_flat(s.to_flat()) == s
+
+
+def test_client_microbatch_mesh_divisibility_rejected():
+    with pytest.raises(ValueError, match="does not decompose"):
+        Scenario(method="fedhc", fleet=FleetSpec(num_clients=16),
+                 exec=ExecSpec(mesh_devices=4, client_microbatch=6))
+    # decomposable: 8 % 4 == 0 and (16/4) % (8/4) == 0
+    Scenario(method="fedhc", fleet=FleetSpec(num_clients=16),
+             exec=ExecSpec(mesh_devices=4, client_microbatch=8))
+    # microbatch >= num_clients collapses to full vmap: layout-free
+    Scenario(method="fedhc", fleet=FleetSpec(num_clients=16),
+             exec=ExecSpec(mesh_devices=4, client_microbatch=16))
