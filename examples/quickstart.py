@@ -15,7 +15,7 @@ cannot drift from it.
 import numpy as np
 
 from repro import api
-from repro.api import DataSpec, FleetSpec, Scenario, TrainSpec
+from repro.api import DataSpec, ExecSpec, FleetSpec, Scenario, TrainSpec
 
 
 def main():
@@ -24,10 +24,12 @@ def main():
         data=DataSpec(samples_per_client=64, eval_size=512),
         fleet=FleetSpec(num_clients=16, num_clusters=3),
         train=TrainSpec(rounds=30, eval_every=10, local_steps=2),
+        exec=ExecSpec(telemetry=True),   # free: rides the one fetch
     )
 
     print("== FedHC (hierarchical clustered FL, satellite PS) ==")
     h = api.run(base, verbose=True)
+    print(f"  {h.telemetry.summary()}")
 
     print("\n== C-FedAvg (centralized baseline) ==")
     c = api.run(base.replace(method="c-fedavg"), verbose=True)

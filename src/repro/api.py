@@ -23,12 +23,22 @@ benchmark results carry their exact scenario manifest.
 
 :func:`run_sweep` is the multi-seed variant (one compiled vmap over the
 seed axis, sync strategies only), returning a :class:`SweepResult`.
+
+``scenario.exec.telemetry`` opts into the observability planes
+(`repro.obs`): per-round device series riding the run's single
+device→host transfer plus host phase spans and cache counters, surfaced
+as ``RunResult.telemetry`` and rendered by ``python -m
+repro.obs.report``.  Off (the default) is bit-identical to the pre-obs
+program; on never changes the trajectory (pinned in
+``tests/test_obs.py``).
 """
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
+import sys
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, NamedTuple, Optional, Sequence
@@ -39,6 +49,8 @@ import numpy as np
 from repro.core import strategies as strat_lib
 from repro.core.scenario import (AsyncSpec, CommsSpec, DataSpec, ExecSpec,
                                  FleetSpec, Scenario, TrainSpec)
+from repro.obs.telemetry import RunTelemetry, rounds_from_scan
+from repro.obs.trace import COUNTERS, Counters, Tracer
 
 __all__ = [
     "Scenario", "DataSpec", "FleetSpec", "TrainSpec", "CommsSpec",
@@ -78,9 +90,17 @@ class RunResult:
     run_s: float               # host: compiled execution + fetch
     flushes: Optional[int] = None
     mean_staleness: Optional[float] = None
-    peak_device_mem_mb: Optional[float] = None  # device 0 peak allocation
-    #                            (jax memory_stats; None on backends that
-    #                             don't report, e.g. CPU)
+    peak_device_mem_mb: Optional[float] = None  # max peak allocation over
+    #                            ALL local devices (jax memory_stats;
+    #                            None on backends that don't report,
+    #                            e.g. CPU)
+    peak_host_mem_mb: Optional[float] = None    # host peak RSS
+    #                            (getrusage ru_maxrss) — the fallback
+    #                            that exists on every backend
+    telemetry: Optional["RunTelemetry"] = None  # both obs planes when
+    #                            ExecSpec.telemetry is on (repro.obs):
+    #                            per-round device series + host spans +
+    #                            cache counters; rides save/load
 
     # ------------------------------------------------------------------
     @property
@@ -133,7 +153,10 @@ class RunResult:
             "timings": {"setup_s": self.setup_s,
                         "compile_s": self.compile_s,
                         "run_s": self.run_s,
-                        "peak_device_mem_mb": self.peak_device_mem_mb},
+                        "peak_device_mem_mb": self.peak_device_mem_mb,
+                        "peak_host_mem_mb": self.peak_host_mem_mb},
+            "telemetry": (self.telemetry.to_dict()
+                          if self.telemetry is not None else None),
         }
         parent = os.path.dirname(path)
         if parent:
@@ -162,6 +185,9 @@ class RunResult:
             flushes=h.get("flushes"),
             mean_staleness=h.get("mean_staleness"),
             peak_device_mem_mb=t.get("peak_device_mem_mb"),
+            peak_host_mem_mb=t.get("peak_host_mem_mb"),
+            telemetry=(RunTelemetry.from_dict(d["telemetry"])
+                       if d.get("telemetry") else None),
         )
 
 
@@ -213,24 +239,44 @@ _COMPILED: Dict[Any, Any] = {}
 
 
 def _peak_device_mem_mb() -> Optional[float]:
-    """Device-0 peak allocation in MB, or None when the backend does not
-    report memory stats (CPU returns None; some platforms raise)."""
+    """Max peak allocation in MB across ALL local devices, or None when
+    the backend does not report memory stats (CPU returns None; some
+    platforms raise).  Device-0-only would under-report any run whose
+    client shards are imbalanced or whose collectives stage on another
+    device."""
+    peaks = []
+    for d in jax.local_devices():
+        try:
+            stats = d.memory_stats()
+        except Exception:
+            continue
+        peak = (stats or {}).get("peak_bytes_in_use")
+        if peak is not None:
+            peaks.append(float(peak))
+    return round(max(peaks) / 1e6, 3) if peaks else None
+
+
+def _peak_host_mem_mb() -> Optional[float]:
+    """Host peak RSS in MB (``getrusage`` ru_maxrss) — the memory
+    telemetry that exists on every backend, including CPU where device
+    memory_stats returns nothing.  ru_maxrss is KB on Linux, bytes on
+    macOS; None where the resource module is unavailable (Windows)."""
     try:
-        stats = jax.local_devices()[0].memory_stats()
+        import resource
+        peak = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss
     except Exception:
         return None
-    if not stats:
-        return None
-    peak = stats.get("peak_bytes_in_use")
-    return None if peak is None else round(float(peak) / 1e6, 3)
+    scale = 1.0 if sys.platform == "darwin" else 1024.0
+    return round(float(peak) * scale / 1e6, 3)
 
 
 def _setup_cache_key(cfg, mesh, caxes):
     """Setup is independent of the execution-only knobs (microbatch,
-    Pallas routing) — normalize those away so benchmark grid cells that
-    vary only execution share one cached setup."""
+    Pallas routing, telemetry) — normalize those away so benchmark grid
+    cells that vary only execution share one cached setup."""
     return (dataclasses.replace(cfg, client_microbatch=0,
-                                use_pallas_kernels=False), mesh, caxes)
+                                use_pallas_kernels=False,
+                                telemetry=False), mesh, caxes)
 
 
 def _resolve_mesh(scenario: Scenario, mesh):
@@ -279,14 +325,29 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
         from repro.launch import mesh as mesh_lib
         mesh_lib.validate_client_sharding(mesh, caxes, cfg.num_clients)
 
+    # host-plane observability: a span tracer when telemetry is on (the
+    # spans ride RunResult.telemetry), cache counters always — counting
+    # is free and the cache tests assert on repro.obs.trace.COUNTERS
+    telem_on = scenario.exec.telemetry
+    tracer = Tracer() if telem_on else None
+    counters0 = COUNTERS.snapshot() if telem_on else {}
+
+    def span(name):
+        return (tracer.span(name) if tracer is not None
+                else contextlib.nullcontext())
+
     t0 = time.perf_counter()
     skey = (_setup_cache_key(cfg, mesh, caxes)
             if setup_cache is not None else None)
     if skey is not None and skey in setup_cache:
+        COUNTERS.inc("api.setup_cache.hit")
         state0, data = setup_cache[skey]
     else:
-        state0, data = eng.setup(cfg, mesh=mesh, client_axes=caxes)
-        jax.block_until_ready((state0, data))
+        if skey is not None:
+            COUNTERS.inc("api.setup_cache.miss")
+        with span("setup"):
+            state0, data = eng.setup(cfg, mesh=mesh, client_axes=caxes)
+            jax.block_until_ready((state0, data))
         if skey is not None:
             setup_cache[skey] = (state0, data)
     setup_s = time.perf_counter() - t0
@@ -300,16 +361,26 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
     compiled = _COMPILED.get(key)
     t0 = time.perf_counter()
     if compiled is None:
+        COUNTERS.inc("api.aot_cache.miss")
         fn = eng._scan_fn(cfg0, mesh, caxes)
-        compiled = fn.lower(state0, data).compile()
+        with span("lower"):
+            lowered = fn.lower(state0, data)
+        with span("compile"):
+            compiled = lowered.compile()
         if len(_COMPILED) >= 32:                # same bound as _scan_fn's
             _COMPILED.pop(next(iter(_COMPILED)))
         _COMPILED[key] = compiled
+    else:
+        COUNTERS.inc("api.aot_cache.hit")
     compile_s = time.perf_counter() - t0        # ~0 on a cache hit
 
     t0 = time.perf_counter()
-    _, outs = compiled(state0, data)
-    history = eng.history_from_outputs(outs)        # the one transfer
+    with span("run"):
+        _, outs = compiled(state0, data)
+        outs = jax.device_get(outs)                 # the one transfer
+    round_outs, scan_telem = engine.split_outputs(outs)
+    with span("fetch"):
+        history = eng.history_from_outputs(round_outs)
     run_s = time.perf_counter() - t0
 
     if verbose:
@@ -318,6 +389,14 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
                                  history["energy_j"]):
             print(f"[{cfg.method}] round {r:5d} acc={a:.3f} loss={l:.3f} "
                   f"T={t:.0f}s E={e:.1f}J")
+
+    run_telem = None
+    if telem_on:
+        run_telem = RunTelemetry(
+            rounds=(rounds_from_scan(scan_telem)
+                    if scan_telem is not None else {}),
+            spans=tracer.span_dicts(),
+            counters=Counters.delta(counters0, COUNTERS.snapshot()))
 
     return RunResult(
         scenario=scenario,
@@ -335,6 +414,8 @@ def run(scenario: Scenario, *, verbose: bool = False, mesh=None,
         flushes=history.get("flushes"),
         mean_staleness=history.get("mean_staleness"),
         peak_device_mem_mb=_peak_device_mem_mb(),
+        peak_host_mem_mb=_peak_host_mem_mb(),
+        telemetry=run_telem,
     )
 
 

@@ -85,8 +85,11 @@ from repro.core.fedhc import FLRunConfig, _local_train
 from repro.data.synthetic import client_batches
 from repro.launch import mesh as mesh_lib
 from repro.models.lenet import lenet_accuracy
+from repro.obs.telemetry import Telemetry
+from repro.obs.trace import phase_scope
 from repro.orbits import contact as contact_lib
 from repro.orbits import cost as cost_lib
+from repro.orbits import topology as topo_lib
 from repro.orbits.constellation import ground_station_position
 from repro.orbits.links import LinkParams
 from repro.sharding import rules as shard_rules
@@ -265,6 +268,8 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
     constellation = engine._constellation_for(c)
     lp, cp = LinkParams(), cost_lib.ComputeParams()
     use_pallas = cfg.use_pallas_kernels
+    telem_on = cfg.telemetry    # extra scan outputs only; the event
+    #                             trajectory is bit-identical on or off
 
     caxes = engine._resolve_client_axes(mesh, client_axes)
     sharded = mesh is not None
@@ -504,7 +509,56 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
             out = AsyncOutput(acc, loss_val, t_restart, e_new, evaluated,
                               do_g.astype(jnp.int32), jnp.sum(flush_i),
                               mean_tau)
-            return new_state, out
+            if not telem_on:
+                return new_state, out
+
+            # ---- 9. telemetry (outputs only, nothing re-enters the carry)
+            with phase_scope("async_event/telemetry", True):
+                n_ok_i = n_ok.astype(jnp.int32)
+                stale_min = jnp.where(
+                    n_ok > 0, jnp.min(jnp.where(ok, tau, jnp.inf)), 0.0)
+                stale_max = jnp.where(
+                    n_ok > 0, jnp.max(jnp.where(ok, tau, -jnp.inf)), 0.0)
+                # compute energy of the cohort's materialized rounds is
+                # time-independent, so subtracting it from the event's
+                # energy delta splits compute vs comm exactly
+                e_cmp = jnp.sum(
+                    jnp.where(in_cohort, cost_lib.compute_energy_j(
+                        data.data_sizes, data.freqs, cp), 0.0))
+                bits1 = model_bits * (n_ok + float(cohort))   # up + fetch
+                bits2 = jnp.where(do_g,
+                                  jnp.float32(2.0 * model_bits * k), 0.0)
+                if strategy.visibility_gated:
+                    # hop counts sampled at the event time (per-client
+                    # upload clocks are gated exactly via the plan; the
+                    # hop telemetry is the event-anchored view)
+                    pos_t = constellation.positions(state.t_sim)
+                    adj = topo_lib.isl_adjacency(pos_t,
+                                                 cfg.isl_max_range_km)
+                    hrows = topo_lib.hop_rows(adj, state.ps_index,
+                                              cfg.isl_max_hops)
+                    hops = hrows[state.assignment, jnp.arange(c)]
+                    routed = ok & jnp.isfinite(hops)
+                    n_routed = jnp.sum(routed.astype(jnp.float32))
+                    hops_mean = (jnp.sum(jnp.where(routed, hops, 0.0))
+                                 / jnp.maximum(n_routed, 1.0))
+                    hops_max = jnp.max(jnp.where(routed, hops, 0.0))
+                else:
+                    hops_mean = hops_max = jnp.float32(0.0)
+                telem = Telemetry(
+                    cohort_size=jnp.int32(cohort), accepted=n_ok_i,
+                    cluster_fill=buf_count,
+                    stale_min=stale_min, stale_mean=mean_tau,
+                    stale_max=stale_max,
+                    flushes=jnp.sum(flush_i),
+                    did_global=do_g.astype(jnp.int32),
+                    reclustered=jnp.int32(0),
+                    bits_stage1=bits1, bits_stage2=bits2,
+                    t_round_s=t_restart - state.t_sim,
+                    e_compute_j=e_cmp,
+                    e_comm_j=(e_new - state.e_sim) - e_cmp,
+                    hops_mean=hops_mean, hops_max=hops_max)
+            return new_state, (out, telem)
 
         return jax.lax.scan(event_step, state0, jnp.arange(cfg.rounds))
 
@@ -530,7 +584,10 @@ def simulate(cfg: FLRunConfig, seed: Optional[int] = None, *,
 def history_from_outputs(outs: AsyncOutput) -> Dict[str, list]:
     """Host-side history dict from a stacked :class:`AsyncOutput` — the
     eval-point extraction is shared with the sync engine
-    (`engine.eval_point_lists`), plus the async telemetry totals."""
+    (`engine.eval_point_lists`), plus the async telemetry totals.  A
+    telemetry-carrying ``(AsyncOutput, Telemetry)`` pair is split and the
+    telemetry dropped (`repro.api.run` extracts it separately)."""
+    outs, _ = engine.split_outputs(outs)
     outs, history = engine.eval_point_lists(outs)
     history["reclusters"] = 0                # static layout by construction
     history["global_rounds"] = int(np.sum(outs.did_global))

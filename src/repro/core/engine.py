@@ -89,8 +89,11 @@ from repro.core.fedhc import FLRunConfig, _local_train, _meta_update_clusters
 from repro.data.synthetic import client_batches, dirichlet_partition, make_split
 from repro.launch import mesh as mesh_lib
 from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
+from repro.obs.telemetry import Telemetry
+from repro.obs.trace import phase_scope
 from repro.orbits import contact as contact_lib
 from repro.orbits import cost as cost_lib
+from repro.orbits import topology as topo_lib
 from repro.orbits.constellation import Constellation, ground_station_position
 from repro.orbits.links import LinkParams
 from repro.sharding import rules as shard_rules
@@ -383,6 +386,9 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
     lp, cp = LinkParams(), cost_lib.ComputeParams()
     sample_bits = ds.img ** 2 * ds.channels * 32.0
     use_pallas = cfg.use_pallas_kernels
+    telem_on = cfg.telemetry    # emit repro.obs Telemetry as extra scan
+    #                             outputs + named_scope phase markers;
+    #                             off compiles the exact pre-obs program
     if use_pallas:
         # lazy: the default path must not require jax.experimental.pallas
         from repro.kernels import ops as kernel_ops
@@ -423,7 +429,7 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
 
         def finish(state, rnd, params, assignment, centroids, ps_index,
                    reclustered, loss_val, t_r, e_r, pending_next,
-                   did_global, global_model_fn):
+                   did_global, global_model_fn, telem=None):
             t_new = state.t_sim + t_r + cfg.round_minutes * 60.0
             e_new = state.e_sim + e_r
             evaluated = (((rnd + 1) % cfg.eval_every == 0)
@@ -439,6 +445,10 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                                    pending_next)
             out = RoundOutput(acc, loss_val, t_new, e_new, reclustered,
                               evaluated, did_global)
+            if telem is not None:
+                # telemetry rides as an extra scan output: same transfer,
+                # same carry — the trajectory cannot change
+                return new_state, (out, telem)
             return new_state, out
 
         # ---- one federated round (fedhc / fedhc-nomaml / h-base / fedce
@@ -506,20 +516,23 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                 do_global = cadence_due
                 pending_next = state.pending_global    # stays False
 
-            params, losses = _local_train(
-                state.params, imgs, labs, lr=cfg.lr, steps=cfg.local_steps,
-                microbatch=cfg.client_microbatch,
-                client_shards=(shard_rules.axis_size(mesh, caxes)
-                               if sharded else 1))
-            params = shard_params(params)
-            losses = shard_clients(losses)
+            with phase_scope("fed_step/local_train", telem_on):
+                params, losses = _local_train(
+                    state.params, imgs, labs, lr=cfg.lr,
+                    steps=cfg.local_steps,
+                    microbatch=cfg.client_microbatch,
+                    client_shards=(shard_rules.axis_size(mesh, caxes)
+                                   if sharded else 1))
+                params = shard_params(params)
+                losses = shard_clients(losses)
             # the merged aggregation formulation: oracle math + sharding
             # pins, traced do_global, dynamic assignment (no recompile)
-            params = agg_spmd.hierarchical_round_sharded(
-                params, losses, data.data_sizes, state.assignment, k,
-                do_global, loss_weighted=strategy.loss_weighted,
-                participating=participating, use_pallas=use_pallas,
-                shardings=param_shardings)
+            with phase_scope("fed_step/aggregate", telem_on):
+                params = agg_spmd.hierarchical_round_sharded(
+                    params, losses, data.data_sizes, state.assignment, k,
+                    do_global, loss_weighted=strategy.loss_weighted,
+                    participating=participating, use_pallas=use_pallas,
+                    shardings=param_shardings)
             loss_val = jnp.mean(losses)
 
             if strategy.visibility_gated:
@@ -586,12 +599,59 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                     (params, assignment, centroids, ps_index))
                 params = shard_params(params)
 
+            telem = None
+            if telem_on:
+                # outputs only: every value below is derived from round
+                # intermediates and feeds nothing back into the carry
+                with phase_scope("fed_step/telemetry", True):
+                    part_f = participating.astype(jnp.float32)
+                    n_part = jnp.sum(part_f).astype(jnp.int32)
+                    members = jnp.sum(jax.nn.one_hot(
+                        assignment, k, dtype=jnp.float32), axis=0)
+                    e_cmp = jnp.sum(part_f * cost_lib.compute_energy_j(
+                        data.data_sizes, data.freqs, cp))
+                    bits1 = 2.0 * model_bits * n_part.astype(jnp.float32)
+                    per_global = (model_bits * k * (k - 1)
+                                  if strategy.isl_global
+                                  else 2.0 * model_bits * k)
+                    bits2 = jnp.where(do_global, jnp.float32(per_global),
+                                      0.0)
+                    if strategy.visibility_gated:
+                        # member->PS hop counts on this round's ISL graph
+                        # (row-sliced bounded relaxation, K sources)
+                        adj = topo_lib.isl_adjacency(
+                            positions, cfg.isl_max_range_km)
+                        hrows = topo_lib.hop_rows(adj, state.ps_index,
+                                                  cfg.isl_max_hops)
+                        hops = hrows[state.assignment,
+                                     jnp.arange(cfg.num_clients)]
+                        routed = participating & jnp.isfinite(hops)
+                        n_routed = jnp.sum(routed.astype(jnp.float32))
+                        hops_mean = (jnp.sum(jnp.where(routed, hops, 0.0))
+                                     / jnp.maximum(n_routed, 1.0))
+                        hops_max = jnp.max(jnp.where(routed, hops, 0.0))
+                    else:
+                        hops_mean = hops_max = jnp.float32(0.0)
+                    z = jnp.float32(0.0)
+                    telem = Telemetry(
+                        cohort_size=jnp.int32(cfg.num_clients),
+                        accepted=n_part, cluster_fill=members,
+                        stale_min=z, stale_mean=z, stale_max=z,
+                        flushes=jnp.int32(k),
+                        did_global=do_global.astype(jnp.int32),
+                        reclustered=reclustered,
+                        bits_stage1=bits1, bits_stage2=bits2,
+                        t_round_s=t_r + cfg.round_minutes * 60.0,
+                        e_compute_j=e_cmp, e_comm_j=e_r - e_cmp,
+                        hops_mean=hops_mean, hops_max=hops_max)
+
             return finish(
                 state, rnd, params, assignment, centroids, ps_index,
                 reclustered, loss_val, t_r, e_r, pending_next,
                 do_global.astype(jnp.int32),
                 lambda: jax.tree_util.tree_map(
-                    lambda x: jnp.mean(x.astype(jnp.float32), 0), params))
+                    lambda x: jnp.mean(x.astype(jnp.float32), 0), params),
+                telem)
 
         # ---- one centralized round (c-fedavg) ----------------------------
         def central_step(state, rnd):
@@ -626,10 +686,33 @@ def _scan_fn_cached(cfg: FLRunConfig, mesh, client_axes):
                 data.freqs, sample_bits=sample_bits,
                 server_freq_hz=cp.max_freq_hz, lp=lp, cp=cp)
 
+            telem = None
+            if telem_on:
+                # raw-data uplink + central training: stage-1 traffic is
+                # the sample upload, compute energy is the server's
+                t_train = (jnp.sum(data.data_sizes) * cp.cycles_per_sample
+                           / cp.max_freq_hz)
+                e_train = cp.eps0 * cp.max_freq_hz * t_train
+                z = jnp.float32(0.0)
+                telem = Telemetry(
+                    cohort_size=jnp.int32(cfg.num_clients),
+                    accepted=jnp.int32(cfg.num_clients),
+                    cluster_fill=jnp.full((k,), float(cfg.num_clients),
+                                          jnp.float32),
+                    stale_min=z, stale_mean=z, stale_max=z,
+                    flushes=jnp.int32(0), did_global=jnp.int32(0),
+                    reclustered=jnp.int32(0),
+                    bits_stage1=(jnp.sum(data.data_sizes)
+                                 * sample_bits).astype(jnp.float32),
+                    bits_stage2=z,
+                    t_round_s=t_r + cfg.round_minutes * 60.0,
+                    e_compute_j=e_train, e_comm_j=e_r - e_train,
+                    hops_mean=z, hops_max=z)
+
             return finish(state, rnd, model, state.assignment,
                           state.centroids, state.ps_index, jnp.int32(0),
                           loss_val, t_r, e_r, state.pending_global,
-                          jnp.int32(0), lambda: model)
+                          jnp.int32(0), lambda: model, telem)
 
         step = central_step if strategy.centralized else fed_step
         return jax.lax.scan(step, state0, jnp.arange(cfg.rounds))
@@ -658,6 +741,16 @@ def simulate(cfg: FLRunConfig, seed: Optional[int] = None, *,
     return _scan_fn(cfg, mesh, client_axes)(state0, data)
 
 
+def split_outputs(outs):
+    """``(outputs, telemetry_or_None)``: a telemetry-on scan stacks a
+    ``(RoundOutput, Telemetry)`` pair per round — a plain tuple, while
+    the bare outputs are NamedTuples (``_fields``).  Shared with the
+    async engine (whose pair is ``(AsyncOutput, Telemetry)``)."""
+    if isinstance(outs, tuple) and not hasattr(outs, "_fields"):
+        return outs
+    return outs, None
+
+
 def eval_point_lists(outs):
     """Fetch a stacked output and extract the per-eval-point lists common
     to both engines (``evaluated``-masked round/acc/loss/time/energy).
@@ -677,7 +770,10 @@ def eval_point_lists(outs):
 
 
 def history_from_outputs(outs: RoundOutput) -> Dict[str, list]:
-    """Host-side history dict from a stacked :class:`RoundOutput`."""
+    """Host-side history dict from a stacked :class:`RoundOutput` (a
+    telemetry-carrying ``(RoundOutput, Telemetry)`` pair is split and the
+    telemetry dropped — `repro.api.run` extracts it separately)."""
+    outs, _ = split_outputs(outs)
     outs, history = eval_point_lists(outs)
     history["reclusters"] = int(np.sum(outs.reclustered))
     history["global_rounds"] = int(np.sum(outs.did_global))
@@ -748,6 +844,8 @@ def run_many_seeds(cfg: FLRunConfig,
         lambda *xs: jnp.stack(xs),
         *[d._replace(plan=None) for _, d in setups])
     final_state, outs = _vmapped_scan_fn(cfg)(state0, data, plan)
+    outs, _ = split_outputs(outs)       # telemetry (if on) is dropped:
+    #                                     sweeps report trajectories only
     outs = jax.device_get(outs)
     return {
         "seeds": np.asarray(list(seeds)),

@@ -158,6 +158,13 @@ class FLRunConfig:
     #                                       sync-engine only (the async
     #                                       per-client clocks would need
     #                                       one recompute per client)
+    telemetry: bool = False               # emit the typed per-round
+    #                                       repro.obs.Telemetry pytree as
+    #                                       extra scan outputs (rides the
+    #                                       one end-of-run transfer; the
+    #                                       trajectory is bit-identical
+    #                                       on or off).  Engine-only; the
+    #                                       legacy loop ignores it
     client_microbatch: int = 0            # scan local training over client
     #                                       sub-blocks of this size instead
     #                                       of one (C, ...) vmap — caps

@@ -216,6 +216,14 @@ class ExecSpec:
     #                                   mesh the block must decompose
     #                                   device-locally (cross-field check
     #                                   in Scenario.__post_init__)
+    telemetry: bool = False           # emit the per-round repro.obs
+    #                                   Telemetry pytree as extra scan
+    #                                   outputs (one transfer, zero extra
+    #                                   syncs) + host span tracing in
+    #                                   api.run -> RunResult.telemetry.
+    #                                   Off: bit-identical to the pre-obs
+    #                                   engines; on: outputs only, the
+    #                                   trajectory never changes
 
     def __post_init__(self):
         if self.mesh_devices is not None:
@@ -374,6 +382,7 @@ class Scenario:
             contact_dtype=self.comms.contact_dtype,
             contact_slices=self.comms.contact_slices,
             contact_factorized=self.comms.contact_factorized,
+            telemetry=self.exec.telemetry,
             client_microbatch=self.exec.client_microbatch,
             async_cohort=self.async_.cohort,
             async_buffer=self.async_.buffer,
@@ -433,7 +442,8 @@ class Scenario:
                 mesh_devices=mesh_devices,
                 client_axes=client_axes,
                 use_pallas_kernels=cfg.use_pallas_kernels,
-                client_microbatch=cfg.client_microbatch),
+                client_microbatch=cfg.client_microbatch,
+                telemetry=cfg.telemetry),
         )
 
     # ---- JSON round-trip (reproducible benchmark manifests) -----------

@@ -1,0 +1,138 @@
+"""Run-report CLI: render a saved :class:`repro.api.RunResult` JSON.
+
+    PYTHONPATH=src python -m repro.obs.report results/run.json
+    PYTHONPATH=src python -m repro.obs.report run.json --trace trace.json
+    PYTHONPATH=src python -m repro.obs.report run.json --rows 12
+
+Prints the run header (method / strategy axes / final accuracy / totals),
+the host phase-time breakdown (setup / lower / compile / run spans +
+cache counters), and — when the run was recorded with
+``ExecSpec.telemetry`` on — a round-by-round device-plane table: cohort
+composition, buffer occupancy, staleness spread, per-stage traffic, the
+compute/comm energy split, and ISL hop counts.  ``--trace`` additionally
+exports the Chrome trace-event JSON (open in https://ui.perfetto.dev).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+import numpy as np
+
+
+def _round_table(rounds, num_rows: int) -> List[str]:
+    n = 0
+    for v in rounds.values():
+        n = int(np.asarray(v).shape[0])
+        break
+    head = (" round |   dt_s | cohort | accept | buf(mean/max) | "
+            "stale(mn/av/mx) | fl | gl | rc | MB s1 | MB s2 | "
+            "E_cmp_J | E_comm_J | hops(av/mx)")
+    lines = [head, "-" * len(head)]
+    if num_rows and n > num_rows:
+        # head + tail around an ellipsis row
+        idx = list(range(num_rows // 2)) + [None] + \
+            list(range(n - (num_rows - num_rows // 2), n))
+    else:
+        idx = list(range(n))
+    g = {k: np.asarray(v) for k, v in rounds.items()}
+    for i in idx:
+        if i is None:
+            lines.append(f"  ...  | ({n - num_rows} more rounds)")
+            continue
+        buf = np.asarray(g["cluster_fill"][i], np.float64)
+        lines.append(
+            f"{i + 1:6d} |{g['t_round_s'][i]:7.1f} |"
+            f"{int(g['cohort_size'][i]):7d} |{int(g['accepted'][i]):7d} |"
+            f" {buf.mean():5.1f} /{buf.max():5.1f} |"
+            f"  {g['stale_min'][i]:4.1f}/{g['stale_mean'][i]:4.1f}"
+            f"/{g['stale_max'][i]:4.1f} |"
+            f"{int(g['flushes'][i]):3d} |{int(g['did_global'][i]):3d} |"
+            f"{int(g['reclustered'][i]):3d} |"
+            f"{g['bits_stage1'][i] / 8e6:6.2f} |"
+            f"{g['bits_stage2'][i] / 8e6:6.2f} |"
+            f"{g['e_compute_j'][i]:8.2f} |{g['e_comm_j'][i]:9.2f} |"
+            f"  {g['hops_mean'][i]:4.1f}/{g['hops_max'][i]:4.1f}")
+    return lines
+
+
+def render(res, num_rows: int = 20) -> str:
+    """The full text report for a loaded RunResult."""
+    s = res.strategy
+    out = []
+    out.append(f"== run report: {s.get('name', res.scenario.method)} ==")
+    out.append(
+        f"strategy: connectivity={s.get('connectivity')} "
+        f"aggregation={s.get('aggregation')} "
+        f"recluster={s.get('recluster', s.get('reclusters'))} "
+        f"mesh={res.mesh_shape}")
+    out.append(
+        f"trajectory: {len(res.round)} eval points over "
+        f"{int(res.round[-1])} rounds | final acc {res.final_acc:.3f} | "
+        f"T={res.time_s[-1]:.0f}s E={res.energy_j[-1]:.1f}J | "
+        f"reclusters={res.reclusters} globals={res.global_rounds}")
+    mem = []
+    if res.peak_device_mem_mb is not None:
+        mem.append(f"device {res.peak_device_mem_mb:.1f} MB")
+    if res.peak_host_mem_mb is not None:
+        mem.append(f"host RSS {res.peak_host_mem_mb:.1f} MB")
+    out.append(f"peak memory: {', '.join(mem) if mem else 'unavailable'}")
+
+    out.append("")
+    out.append("-- phase breakdown (host wall clock) --")
+    out.append(f"  setup   {res.setup_s:8.3f}s")
+    out.append(f"  compile {res.compile_s:8.3f}s")
+    out.append(f"  run     {res.run_s:8.3f}s")
+    out.append(f"  total   {res.wall_s:8.3f}s")
+    t = res.telemetry
+    if t is not None and t.spans:
+        out.append("  spans:")
+        for sp in t.spans:
+            out.append(f"    {'  ' * sp.get('depth', 0)}{sp['name']:<12} "
+                       f"{sp['dur_us'] / 1e6:8.3f}s")
+    if t is not None and t.counters:
+        out.append("  counters: " + ", ".join(
+            f"{k}={v}" for k, v in sorted(t.counters.items())))
+
+    out.append("")
+    if t is None or not t.rounds:
+        out.append("(no device-plane telemetry in this run — record with "
+                   "ExecSpec(telemetry=True) for the round table)")
+    else:
+        out.append(f"-- device plane: {t.num_rounds} rounds --")
+        out.extend(_round_table(t.rounds, num_rows))
+        out.append("")
+        out.append(t.summary())
+    return "\n".join(out)
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.report",
+        description="Render a saved RunResult JSON: round table, "
+                    "phase-time breakdown, Perfetto trace export.")
+    ap.add_argument("run_json", help="path written by RunResult.save()")
+    ap.add_argument("--rows", type=int, default=20,
+                    help="max round-table rows (head+tail; default 20)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="also export Chrome trace-event JSON "
+                         "(load in https://ui.perfetto.dev)")
+    args = ap.parse_args(argv)
+
+    from repro.api import RunResult
+    res = RunResult.load(args.run_json)
+    print(render(res, num_rows=args.rows))
+    if args.trace:
+        if res.telemetry is None:
+            print(f"\nno telemetry recorded — cannot export {args.trace}",
+                  file=sys.stderr)
+            return 2
+        res.telemetry.save_chrome_trace(args.trace)
+        print(f"\nChrome trace-event JSON written to {args.trace} "
+              f"(open in https://ui.perfetto.dev)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

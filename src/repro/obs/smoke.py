@@ -1,0 +1,116 @@
+"""CI telemetry smoke: the observability invariant, end to end.
+
+    PYTHONPATH=src python -m repro.obs.smoke --out telemetry-trace.json
+
+Runs a tiny scenario (one sync, one async) twice — telemetry off and
+telemetry on, sharing one setup cache so the data/fleet are identical —
+and enforces, with a nonzero exit on any violation:
+
+1. **Bit-identical trajectories.**  Telemetry may add outputs; it must
+   never perturb the training trajectory.  ``to_history()`` dicts are
+   compared with ``==`` — exact float equality, not tolerance.
+2. **Bounded overhead.**  Per-round ``run_s`` (min over repeats, so
+   scheduler noise doesn't flake CI) with telemetry on must be within
+   ``--max-overhead`` (default 10%) of off — plus a small absolute
+   grace floor, since a tiny smoke round runs in microseconds.
+3. **Valid trace artifact.**  The Chrome trace-event JSON written to
+   ``--out`` must load and pass :func:`repro.obs.telemetry
+   .load_chrome_trace` validation (this is the file CI uploads).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import List, Optional
+
+
+def _scenarios():
+    from repro.core.fedhc import FLRunConfig
+    from repro.core.scenario import ExecSpec, Scenario
+
+    tiny = dict(num_clients=12, num_clusters=2, rounds=6, eval_every=3,
+                samples_per_client=16, local_steps=1, batch_size=8,
+                eval_size=64, seed=7)
+    sync = Scenario.from_flat(FLRunConfig(method="fedhc", **tiny))
+    asyn = Scenario.from_flat(FLRunConfig(
+        method="fedhc-async", async_cohort=4, async_buffer=3, **tiny))
+    out = []
+    for sc in (sync, asyn):
+        off = sc.replace(exec=ExecSpec(telemetry=False))
+        on = sc.replace(exec=ExecSpec(telemetry=True))
+        out.append((sc.method, off, on))
+    return out
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.obs.smoke",
+        description="CI gate: telemetry on/off bit-parity + overhead.")
+    ap.add_argument("--out", default=None, metavar="TRACE.json",
+                    help="write the telemetry-on Chrome trace here")
+    ap.add_argument("--max-overhead", type=float, default=0.10,
+                    help="max fractional per-round run_s overhead "
+                         "telemetry-on vs off (default 0.10)")
+    ap.add_argument("--repeats", type=int, default=3,
+                    help="timing repeats; min is compared (default 3)")
+    args = ap.parse_args(argv)
+
+    from repro import api
+    from repro.obs.telemetry import load_chrome_trace
+
+    failures = []
+    last_on = None
+    for name, sc_off, sc_on in _scenarios():
+        cache = {}
+        # Warm both AOT programs + shared setup before timing.
+        res_off = api.run(sc_off, setup_cache=cache)
+        res_on = api.run(sc_on, setup_cache=cache)
+        last_on = res_on
+
+        ident = res_off.to_history() == res_on.to_history()
+        print(f"[{name}] bit-identical trajectory: {ident}"
+              f"  (final acc {res_on.final_acc:.3f})")
+        if not ident:
+            failures.append(f"{name}: telemetry ON changed the trajectory")
+
+        t = res_on.telemetry
+        if t is None or t.num_rounds == 0:
+            failures.append(f"{name}: telemetry ON but no round series")
+        else:
+            print(f"[{name}] {t.summary()}")
+
+        t_off = min(api.run(sc_off, setup_cache=cache).run_s
+                    for _ in range(args.repeats))
+        t_on = min(api.run(sc_on, setup_cache=cache).run_s
+                   for _ in range(args.repeats))
+        # Grace floor: at smoke scale a "round" is ~µs; only fail on a
+        # relative regression that is also macroscopically visible.
+        overhead = (t_on - t_off) / max(t_off, 1e-9)
+        visible = (t_on - t_off) > 0.010
+        print(f"[{name}] run_s off={t_off:.4f} on={t_on:.4f} "
+              f"overhead={overhead * 100:+.1f}%")
+        if overhead > args.max_overhead and visible:
+            failures.append(
+                f"{name}: telemetry overhead {overhead * 100:.1f}% "
+                f"> {args.max_overhead * 100:.0f}%")
+
+    if args.out and last_on is not None and last_on.telemetry is not None:
+        last_on.telemetry.save_chrome_trace(args.out)
+        try:
+            trace = load_chrome_trace(args.out)
+            print(f"trace artifact: {args.out} "
+                  f"({len(trace['traceEvents'])} trace events) — valid")
+        except Exception as e:  # malformed artifact is a CI failure
+            failures.append(f"trace artifact invalid: {e}")
+
+    if failures:
+        print("\nSMOKE FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  - {f}", file=sys.stderr)
+        return 1
+    print("\ntelemetry smoke OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,139 @@
+"""Host-plane span tracer + process-wide cache counters.
+
+:class:`Tracer` wraps host phases (setup / lower / compile / run / fetch,
+benchmark cells, ...) in nested spans recorded against one wall-clock
+epoch.  Spans optionally enter ``jax.profiler.TraceAnnotation``, so when
+the user also captures an XLA profiler trace (``jax.profiler.trace``),
+the semantic phase names line up with the XLA activity rows in Perfetto.
+``Tracer.span_dicts()`` is the JSON-ready record that rides
+``RunResult.telemetry``; the Chrome trace-event rendering lives in
+`obs.telemetry.RunTelemetry.to_chrome_trace`.
+
+:data:`COUNTERS` is the process-wide counter registry.  `repro.api.run`
+increments ``api.setup_cache.hit/miss`` (the caller-owned ``setup_cache``
+dict) and ``api.aot_cache.hit/miss`` (the seed-normalized AOT executable
+cache) on every call — always, telemetry on or off: counting is host-side
+and free, and the cache tests assert on it directly.
+
+:func:`phase_scope` is the in-scan marker: a ``jax.named_scope`` wrapper
+the engines put around ``fed_step`` phases when telemetry is on, so HLO
+op metadata (and thus XLA profiler traces) carries the semantic phase
+names.  Disabled it is a no-op nullcontext — the telemetry-off program is
+byte-identical to the pre-obs build.
+"""
+from __future__ import annotations
+
+import collections
+import contextlib
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterator, List, Optional
+
+
+@dataclass
+class Span:
+    """One closed host span, relative to its tracer's epoch."""
+    name: str
+    ts_us: float
+    dur_us: float
+    depth: int
+    args: Dict[str, Any] = field(default_factory=dict)
+
+    def to_dict(self) -> Dict[str, Any]:
+        return {"name": self.name, "ts_us": round(self.ts_us, 3),
+                "dur_us": round(self.dur_us, 3), "depth": self.depth,
+                "args": self.args}
+
+
+class Tracer:
+    """Nested wall-clock spans with optional XLA profiler annotation."""
+
+    def __init__(self) -> None:
+        self._epoch = time.perf_counter()
+        self._depth = 0
+        self.spans: List[Span] = []
+
+    @contextlib.contextmanager
+    def span(self, name: str, annotate: bool = True,
+             **args: Any) -> Iterator[None]:
+        """``with tracer.span("compile"): ...`` — records one span;
+        nesting depth follows the with-stack.  ``annotate=True`` also
+        enters ``jax.profiler.TraceAnnotation(name)`` when available, so
+        an XLA profiler capture shows the same phase boundaries."""
+        ann = None
+        if annotate:
+            try:
+                import jax.profiler
+                ann = jax.profiler.TraceAnnotation(name)
+                ann.__enter__()
+            except Exception:
+                ann = None
+        depth, self._depth = self._depth, self._depth + 1
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            t1 = time.perf_counter()
+            self._depth = depth
+            if ann is not None:
+                try:
+                    ann.__exit__(None, None, None)
+                except Exception:
+                    pass
+            self.spans.append(Span(name, (t0 - self._epoch) * 1e6,
+                                   (t1 - t0) * 1e6, depth, dict(args)))
+
+    def span_dicts(self) -> List[Dict[str, Any]]:
+        """JSON-ready span records, in start order."""
+        return [s.to_dict() for s in sorted(self.spans,
+                                            key=lambda s: s.ts_us)]
+
+    def phase_times(self) -> Dict[str, float]:
+        """Top-level span name -> total seconds."""
+        out: Dict[str, float] = {}
+        for s in self.spans:
+            if s.depth == 0:
+                out[s.name] = out.get(s.name, 0.0) + s.dur_us / 1e6
+        return out
+
+
+class Counters:
+    """Thread-safe monotonic counters (process-wide singleton below)."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._c: collections.Counter = collections.Counter()
+
+    def inc(self, name: str, n: int = 1) -> None:
+        with self._lock:
+            self._c[name] += n
+
+    def get(self, name: str) -> int:
+        with self._lock:
+            return self._c[name]
+
+    def snapshot(self) -> Dict[str, int]:
+        with self._lock:
+            return dict(self._c)
+
+    @staticmethod
+    def delta(before: Dict[str, int],
+              after: Dict[str, int]) -> Dict[str, int]:
+        """Per-run counter increments between two snapshots."""
+        return {k: v - before.get(k, 0) for k, v in after.items()
+                if v - before.get(k, 0)}
+
+
+COUNTERS = Counters()
+
+
+def phase_scope(name: str, enabled: bool = True):
+    """``jax.named_scope(name)`` when enabled (names HLO metadata so XLA
+    profiler rows line up with engine phases), nullcontext otherwise —
+    the disabled path emits nothing and keeps the traced program
+    identical to a build without any obs import."""
+    if not enabled:
+        return contextlib.nullcontext()
+    import jax
+    return jax.named_scope(name)

@@ -189,6 +189,30 @@ def hop_counts(adj: jnp.ndarray, max_hops: int) -> jnp.ndarray:
     return min_plus_closure(w, max_hops)
 
 
+def hop_rows(adj: jnp.ndarray, sources: jnp.ndarray,
+             max_hops: int) -> jnp.ndarray:
+    """(S,N) f32 minimum hop count from each source satellite to every
+    satellite (inf when unreachable in <= ``max_hops`` hops) — the
+    row-sliced form of :func:`hop_counts` for a small source set (e.g.
+    the K cluster PSs), O(max_hops * S * N^2) instead of the full N^3
+    closure.  Cheap enough to ride inside the round scan as telemetry
+    (`repro.obs`): hop counts member->PS are ``rows[assignment,
+    arange(N)]`` by the symmetry of the ISL graph."""
+    n = adj.shape[0]
+    w = jnp.where(adj, 1.0, jnp.inf)
+    w = jnp.where(jnp.eye(n, dtype=bool), 0.0, w)
+    rows = w[sources]                      # (S,N): <= 1 hop
+
+    def relax(r, _):
+        # one more hop: r'[s,j] = min_i r[s,i] + w[i,j]
+        return jnp.minimum(r, jnp.min(r[:, :, None] + w[None, :, :],
+                                      axis=1)), None
+
+    rows, _ = jax.lax.scan(relax, rows, None,
+                           length=max(0, int(max_hops) - 1))
+    return rows
+
+
 def route_time_per_bit(positions: jnp.ndarray, lp: links_lib.LinkParams,
                        max_range_km: float, max_hops: int,
                        body_radius_km: float = R_EARTH_KM) -> jnp.ndarray:

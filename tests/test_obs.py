@@ -1,0 +1,250 @@
+"""Observability subsystem (repro/obs): the hard invariant — telemetry
+OFF is bit-identical to the pre-obs engines, telemetry ON changes
+*outputs only*, never the trajectory — plus both planes' plumbing:
+per-round device series shapes/semantics, the energy split
+reconciliation, JSON round-trip through RunResult.save/load, the span
+tracer, cache counters, the report CLI, and Chrome trace export."""
+import json
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api import ExecSpec, RunResult, Scenario
+from repro.core.fedhc import FLRunConfig
+from repro.obs.telemetry import (RunTelemetry, Telemetry,
+                                 load_chrome_trace)
+from repro.obs.trace import COUNTERS, Counters, Tracer
+
+
+def _flat(method, **kw):
+    base = dict(method=method, num_clients=12, num_clusters=2, rounds=4,
+                eval_every=2, samples_per_client=16, local_steps=1,
+                batch_size=8, eval_size=64)
+    base.update(kw)
+    return FLRunConfig(**base)
+
+
+def _pair(method, **kw):
+    """(telemetry-off result, telemetry-on result) sharing one setup."""
+    sc = Scenario.from_flat(_flat(method, **kw))
+    cache = {}
+    off = api.run(sc.replace(exec=ExecSpec(telemetry=False)),
+                  setup_cache=cache)
+    on = api.run(sc.replace(exec=ExecSpec(telemetry=True)),
+                 setup_cache=cache)
+    return off, on
+
+
+@pytest.fixture(scope="module")
+def fedhc_pair():
+    return _pair("fedhc")
+
+
+@pytest.fixture(scope="module")
+def async_pair():
+    return _pair("fedhc-async", async_cohort=4, async_buffer=3)
+
+
+@pytest.fixture(scope="module")
+def fedspace_on():
+    return _pair("fedspace", rounds=6, eval_every=3)[1]
+
+
+# ---- the hard invariant ---------------------------------------------------
+
+
+def test_sync_on_off_bit_identical(fedhc_pair):
+    off, on = fedhc_pair
+    assert off.to_history() == on.to_history()      # exact, not allclose
+    assert off.telemetry is None                    # off: no record at all
+    assert on.telemetry is not None
+
+
+def test_async_on_off_bit_identical(async_pair):
+    off, on = async_pair
+    assert off.to_history() == on.to_history()
+    t = on.telemetry.rounds
+    # accepted <= cohort, staleness ordered min <= mean <= max, all >= 0
+    assert (t["accepted"] <= t["cohort_size"]).all()
+    assert (t["stale_min"] >= 0).all()
+    assert (t["stale_min"] <= t["stale_mean"] + 1e-6).all()
+    assert (t["stale_mean"] <= t["stale_max"] + 1e-6).all()
+
+
+def test_exec_spec_default_off():
+    assert ExecSpec().telemetry is False
+    assert Scenario.from_flat(_flat("fedhc")).to_flat().telemetry is False
+
+
+# ---- device-plane series semantics ---------------------------------------
+
+
+def test_round_series_shapes_and_keys(fedhc_pair):
+    _, on = fedhc_pair
+    t = on.telemetry
+    assert set(t.rounds) == set(Telemetry._fields)
+    R, K = 4, 2
+    for name in Telemetry._fields:
+        want = (R, K) if name == "cluster_fill" else (R,)
+        assert t.rounds[name].shape == want, name
+    assert t.num_rounds == R
+    # sync conventions: staleness identically 0, stage-1 flush = K
+    assert (t.rounds["stale_max"] == 0).all()
+    assert (t.rounds["flushes"] == K).all()
+    assert (t.rounds["cohort_size"] == 12).all()
+    # members per cluster sum to the fleet
+    np.testing.assert_array_equal(
+        t.rounds["cluster_fill"].sum(axis=1), np.full(R, 12.0))
+
+
+def test_energy_split_reconciles(fedhc_pair):
+    """e_compute + e_comm is exact: per-round sums cumulate to the
+    trajectory's cumulative energy at every eval point."""
+    _, on = fedhc_pair
+    t = on.telemetry.rounds
+    cum_e = np.cumsum(t["e_compute_j"] + t["e_comm_j"])
+    for r, e in zip(on.round, on.energy_j):
+        np.testing.assert_allclose(cum_e[int(r) - 1], e, rtol=1e-4)
+    cum_t = np.cumsum(t["t_round_s"])
+    for r, s in zip(on.round, on.time_s):
+        np.testing.assert_allclose(cum_t[int(r) - 1], s, rtol=1e-4)
+    assert (t["e_compute_j"] > 0).all()
+
+
+def test_fedspace_hop_telemetry(fedspace_on):
+    """Visibility-gated routing surfaces real hop counts: finite,
+    mean <= max, and not identically zero across the run."""
+    t = fedspace_on.telemetry.rounds
+    assert np.isfinite(t["hops_mean"]).all()
+    assert (t["hops_mean"] <= t["hops_max"] + 1e-6).all()
+    assert t["hops_max"].max() >= 1.0
+    # visibility gating also shows up as accepted < cohort on some round
+    assert (t["accepted"] <= t["cohort_size"]).all()
+
+
+# ---- host plane: spans, counters, timing ---------------------------------
+
+
+def test_host_spans_cover_phases(fedhc_pair):
+    _, on = fedhc_pair
+    names = [s["name"] for s in on.telemetry.spans]
+    assert "run" in names and "fetch" in names
+    for s in on.telemetry.spans:
+        assert s["dur_us"] >= 0 and s["ts_us"] >= 0
+
+
+def test_tracer_nesting_and_durations():
+    tr = Tracer()
+    with tr.span("outer"):
+        with tr.span("inner", annotate=False):
+            pass
+    spans = tr.span_dicts()
+    d = {s["name"]: s for s in spans}
+    assert d["outer"]["depth"] == 0 and d["inner"]["depth"] == 1
+    assert d["inner"]["ts_us"] >= d["outer"]["ts_us"]
+    assert d["outer"]["dur_us"] >= d["inner"]["dur_us"]
+    assert tr.phase_times()["outer"] > 0
+
+
+def test_counters_inc_and_delta():
+    c = Counters()
+    c.inc("x")
+    c.inc("x", 2)
+    before = c.snapshot()
+    c.inc("x")
+    c.inc("y")
+    assert Counters.delta(before, c.snapshot()) == {"x": 1, "y": 1}
+
+
+def test_timing_fields_nonnegative_both_engines(fedhc_pair, async_pair):
+    for res in (*fedhc_pair, *async_pair):
+        assert res.setup_s >= 0
+        assert res.compile_s >= 0
+        assert res.run_s > 0
+        assert res.wall_s >= res.run_s
+
+
+def test_setup_cache_second_call_hits():
+    """Satellite pin: the second api.run against one setup_cache reuses
+    the eager setup — observed through the always-on COUNTERS, no
+    telemetry required."""
+    sc = Scenario.from_flat(_flat("h-base", rounds=3, eval_every=3))
+    cache = {}
+    s0 = COUNTERS.snapshot()
+    api.run(sc, setup_cache=cache)
+    d1 = Counters.delta(s0, COUNTERS.snapshot())
+    assert d1.get("api.setup_cache.miss") == 1
+    s1 = COUNTERS.snapshot()
+    r2 = api.run(sc, setup_cache=cache)
+    d2 = Counters.delta(s1, COUNTERS.snapshot())
+    assert d2.get("api.setup_cache.hit") == 1
+    assert "api.setup_cache.miss" not in d2
+    assert r2.setup_s == 0.0 or r2.setup_s < 0.05  # cached setup is ~free
+
+
+def test_peak_host_mem_reported(fedhc_pair):
+    off, _ = fedhc_pair
+    # ru_maxrss exists on every POSIX host this repo targets
+    assert off.peak_host_mem_mb is not None
+    assert off.peak_host_mem_mb > 0
+
+
+# ---- persistence + rendering ---------------------------------------------
+
+
+def test_telemetry_save_load_roundtrip(tmp_path, fedhc_pair):
+    _, on = fedhc_pair
+    p = tmp_path / "run.json"
+    on.save(str(p))
+    back = RunResult.load(str(p))
+    assert back.telemetry is not None
+    for name in Telemetry._fields:
+        np.testing.assert_allclose(back.telemetry.rounds[name],
+                                   on.telemetry.rounds[name])
+    assert back.telemetry.spans == on.telemetry.spans
+    assert back.telemetry.counters == on.telemetry.counters
+    assert back.peak_host_mem_mb == on.peak_host_mem_mb
+    # telemetry-off results keep the old schema working
+    p2 = tmp_path / "off.json"
+    fedhc_pair[0].save(str(p2))
+    assert RunResult.load(str(p2)).telemetry is None
+
+
+def test_run_telemetry_dict_roundtrip(fedhc_pair):
+    t = fedhc_pair[1].telemetry
+    back = RunTelemetry.from_dict(t.to_dict())
+    assert back.num_rounds == t.num_rounds
+    assert json.dumps(back.to_dict()) == json.dumps(t.to_dict())
+
+
+def test_chrome_trace_export(tmp_path, fedhc_pair):
+    _, on = fedhc_pair
+    p = tmp_path / "trace.json"
+    on.telemetry.save_chrome_trace(str(p))
+    d = load_chrome_trace(str(p))
+    evs = d["traceEvents"]
+    phases = {e["ph"] for e in evs}
+    assert "X" in phases and "C" in phases and "M" in phases
+    # counter events live on the simulated-clock track (pid 2)
+    assert all(e["pid"] == 2 for e in evs if e["ph"] == "C")
+    assert any(e["pid"] == 1 for e in evs if e["ph"] == "X")
+
+
+def test_report_cli(tmp_path, fedhc_pair, capsys):
+    from repro.obs import report
+    _, on = fedhc_pair
+    p = tmp_path / "run.json"
+    on.save(str(p))
+    trace = tmp_path / "trace.json"
+    assert report.main([str(p), "--trace", str(trace)]) == 0
+    out = capsys.readouterr().out
+    assert "round |" in out and "device plane: 4 rounds" in out
+    assert "phase breakdown" in out
+    load_chrome_trace(str(trace))
+    # telemetry-off runs still render (no table), but --trace is an error
+    p2 = tmp_path / "off.json"
+    fedhc_pair[0].save(str(p2))
+    assert report.main([str(p2)]) == 0
+    assert "no device-plane telemetry" in capsys.readouterr().out
+    assert report.main([str(p2), "--trace", str(tmp_path / "x.json")]) == 2

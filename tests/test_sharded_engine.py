@@ -285,3 +285,34 @@ def test_setup_builds_client_stack_from_local_shards():
         print(json.dumps({"ok": True}))
     """)
     assert json.loads(out.strip().splitlines()[-1])["ok"]
+
+
+def test_sharded_telemetry_on_off_bit_identical():
+    """Observability invariant on the mesh path: telemetry=True adds scan
+    outputs but must not perturb the sharded trajectory (exact equality,
+    like the single-device pin in test_obs.py), and the device-plane
+    series must come back through api.run's single fetch."""
+    out = _run("""
+        from repro import api
+        from repro.core.scenario import ExecSpec, Scenario
+        cfg = FLRunConfig(method="fedhc", num_clients=32, num_clusters=3,
+                          rounds=6, rounds_per_global=3, eval_every=3,
+                          samples_per_client=16, local_steps=1,
+                          eval_size=64, batch_size=8)
+        sc = Scenario.from_flat(cfg, mesh_devices=0)
+        cache = {}
+        off = api.run(sc.replace(exec=ExecSpec(mesh_devices=0)),
+                      setup_cache=cache)
+        on = api.run(sc.replace(exec=ExecSpec(mesh_devices=0,
+                                              telemetry=True)),
+                     setup_cache=cache)
+        assert off.to_history() == on.to_history()
+        assert off.telemetry is None
+        t = on.telemetry.rounds
+        assert t["cohort_size"].shape == (6,)
+        assert t["cluster_fill"].shape == (6, 3)
+        assert (t["cohort_size"] == 32).all()
+        print(json.dumps({"ok": True, "mesh": on.mesh_shape}))
+    """)
+    rec = json.loads(out.strip().splitlines()[-1])
+    assert rec["ok"] and rec["mesh"] == {"clients": 8}
