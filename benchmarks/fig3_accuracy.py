@@ -1,76 +1,101 @@
 """Paper Fig. 3: model accuracy vs training round for each method, across
 clustering configurations K in {3,4,5}, on both datasets.
 
-Each grid cell is seed-averaged: `repro.api.run_sweep` stacks the
-per-seed setups and vmaps the whole round scan, so the curves for all
-seeds of a cell come from ONE compiled call (and one device fetch).
+The grid is a :class:`repro.fleet.SweepGrid` (see :func:`build_grid`):
+a dataset axis co-varying the round budget, K, method, and seed.  The
+fleet planner batches every compile-cache equivalence class through one
+vmapped executable (the old per-cell `api.run_sweep` calls, now derived
+from the manifest instead of hand-rolled loops) and persists one
+RunResult per cell under ``results/sweeps/<grid-hash>/`` — so a killed
+sweep resumes per-cell, not per-output-file.  C-FedAvg is centralized
+(K=1 inside the engine) so its K columns collapse into ONE equivalence
+class: the planner runs it once per (dataset, seed) and fans the result
+out to every K cell — exactly the paper's footnote, now automatic.
 
-Writes results/fig3_accuracy.json and prints an ASCII summary.
-C-FedAvg is centralized (K=1) so it runs once per dataset and is reused
-across K columns — exactly the paper's footnote.
+Writes the legacy ``results/fig3_accuracy.json`` schema (seed-averaged
+history per ``dataset/K=k/method`` key) assembled from the store, and
+prints an ASCII summary.
 """
 from __future__ import annotations
 
+import dataclasses
 import json
 import os
-import time
 
 import numpy as np
 
 import benchmarks.fl_common as C
 from benchmarks.fl_common import DATASETS, METHODS, make_scenario
-from repro import api
+from repro.fleet import SweepGrid, GridAxis, run_grid
+
+SWEEP_DIR = "results/sweeps"
 
 
-def run_cell(scenario, seeds) -> dict:
-    """One grid cell -> seed-averaged history dict (fig3/table1 schema:
-    per-eval-round lists, plus per-seed extras)."""
-    sweep = api.run_sweep(scenario, seeds)
-    acc = sweep.eval_curves("acc")
+def build_grid(datasets=("mnist-like", "cifar-like"), ks=None,
+               methods=None, seeds=None) -> SweepGrid:
+    """The Fig. 3 grid as a declarative manifest: dataset (with its
+    co-varying round budget) x K x method x seed.  Base fields come from
+    ``fl_common.make_scenario`` so the cells stay bit-identical to the
+    pre-fleet benchmark."""
+    ks = C.KS if ks is None else ks
+    methods = METHODS if methods is None else methods
+    seeds = C.SEEDS if seeds is None else seeds
+    base_sc = make_scenario(methods[0], ks[0], DATASETS[datasets[0]])
+    return SweepGrid.build(
+        "fig3",
+        base=base_sc.to_dict(),
+        axes=[
+            GridAxis.joint("dataset", [
+                (name, {"data.dataset":
+                        dataclasses.asdict(DATASETS[name]),
+                        "train.rounds": C.ROUNDS[name]})
+                for name in datasets]),
+            GridAxis.single("fleet.num_clusters", ks, name="K"),
+            GridAxis.single("method", methods),
+            GridAxis.single("seed", seeds),
+        ])
+
+
+def _history(results) -> dict:
+    """Seed-group of RunResults -> the legacy fig3 history dict."""
+    acc = np.stack([r.acc for r in results])
     return {
-        "round": [int(r) for r in sweep.eval_rounds],
+        "round": [int(r) for r in results[0].round],
         "acc": np.nanmean(acc, axis=0).tolist(),
         "acc_std": np.nanstd(acc, axis=0).tolist(),
-        "loss": sweep.eval_curves("loss").mean(axis=0).tolist(),
-        "time_s": sweep.eval_curves("time_s").mean(axis=0).tolist(),
-        "energy_j": sweep.eval_curves("energy_j").mean(axis=0).tolist(),
-        "reclusters": sweep.reclusters.tolist(),
-        "global_rounds": sweep.global_rounds.tolist(),
-        "seeds": [int(s) for s in seeds],
+        "loss": np.stack([r.loss for r in results]).mean(axis=0).tolist(),
+        "time_s": np.stack([r.time_s for r in results])
+                    .mean(axis=0).tolist(),
+        "energy_j": np.stack([r.energy_j for r in results])
+                      .mean(axis=0).tolist(),
+        "reclusters": [int(r.reclusters) for r in results],
+        "global_rounds": [int(r.global_rounds) for r in results],
+        "seeds": [int(r.scenario.seed) for r in results],
+        "wall_s": round(float(sum(r.wall_s for r in results)), 1),
     }
 
 
 def run(out_path="results/fig3_accuracy.json", datasets=("mnist-like",
                                                          "cifar-like")):
     os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    grid = build_grid(datasets=datasets)
+    store, report = run_grid(grid, SWEEP_DIR)   # resumable: completed
+    #                                             cells are skipped
+
+    # assemble the legacy dataset/K/method-keyed schema from the store
+    by_key = {}
+    for cell in grid.cells():
+        sc = cell.scenario
+        key = f"{sc.data.dataset.name}/K={sc.fleet.num_clusters}/{sc.method}"
+        by_key.setdefault(key, []).append(store.load_cell(cell.key))
     results = {}
-    if os.path.exists(out_path):           # resume: skip completed cells
-        with open(out_path) as f:
-            results = json.load(f)
-    for ds_name in datasets:
-        ds = DATASETS[ds_name]
-        cfa = None
-        for k in C.KS:                     # module attr: --fast can shrink it
-            for method in METHODS:
-                key = f"{ds_name}/K={k}/{method}"
-                if key in results:
-                    if method == "c-fedavg" and cfa is None:
-                        cfa = results[key]
-                    continue
-                if method == "c-fedavg" and cfa is not None:
-                    results[key] = cfa
-                    continue
-                t0 = time.time()
-                h = run_cell(make_scenario(method, k, ds), C.SEEDS)
-                h["wall_s"] = round(time.time() - t0, 1)
-                if method == "c-fedavg":
-                    cfa = h
-                results[key] = h
-                print(f"[fig3] {key}: final acc {h['acc'][-1]:.3f} "
-                      f"+/- {h['acc_std'][-1]:.3f} over {len(h['seeds'])} "
-                      f"seeds (wall {h['wall_s']}s)", flush=True)
-                with open(out_path, "w") as f:   # incremental: crash-safe
-                    json.dump(results, f)
+    for key, group in by_key.items():
+        group.sort(key=lambda r: r.scenario.seed)
+        results[key] = _history(group)
+        h = results[key]
+        print(f"[fig3] {key}: final acc {h['acc'][-1]:.3f} "
+              f"+/- {h['acc_std'][-1]:.3f} over {len(h['seeds'])} seeds",
+              flush=True)
     with open(out_path, "w") as f:
         json.dump(results, f)
     return results

@@ -64,22 +64,17 @@ def main() -> None:
     section("fig3-accuracy")
     from benchmarks import fig3_accuracy, table1_time_energy
     fig3_path = "results/fig3_accuracy.json"
-    if os.path.exists(fig3_path) and not args.fast:
-        # the full grid takes hours on 1 CPU core; reuse the cached run
-        # (delete results/fig3_accuracy.json or pass --fast to regenerate)
-        import json
-        results = json.load(open(fig3_path))
-        print(f"(cached: {fig3_path}, {len(results)} runs)")
-    elif args.fast:
+    datasets = ("mnist-like",) if args.fast else ("mnist-like", "cifar-like")
+    if args.fast:
         import benchmarks.fl_common as C
         C.KS = (4,)
-        results = fig3_accuracy.run(fig3_path, datasets=("mnist-like",))
-    else:
-        results = fig3_accuracy.run(fig3_path)
+    # the fleet store resumes per cell: completed cells under
+    # results/sweeps/ are never re-run, so re-invoking is cheap
+    results = fig3_accuracy.run(fig3_path, datasets=datasets)
     print(fig3_accuracy.summarize(results))
 
     section("table1-time-energy")
-    table = table1_time_energy.run(fig3_path)
+    table = table1_time_energy.run(datasets=datasets)
     print(table1_time_energy.summarize(table))
 
     section("roofline")

@@ -222,6 +222,51 @@ class SweepResult:
         """(S,) last-eval-point accuracy per seed."""
         return self.eval_curves("acc")[:, -1]
 
+    # ---- persistence (the PR 5 follow-up: RunResult had it, SweepResult
+    # ---- did not) ------------------------------------------------------
+    def save(self, path: str) -> None:
+        """JSON sweep-with-manifest: the exact scenario rides along (seeds
+        come from the ``seeds`` array; ``scenario.seed`` is inert).  NaN
+        entries (non-eval rounds) are encoded as JSON ``null`` so the file
+        stays standard-compliant; :meth:`load` restores them exactly."""
+        def col(a):
+            a = np.asarray(a, np.float64)
+            return [[None if np.isnan(x) else float(x) for x in row]
+                    for row in a]
+        d = {
+            "scenario": self.scenario.to_dict(),
+            "seeds": [int(s) for s in self.seeds],
+            "acc": col(self.acc), "loss": col(self.loss),
+            "time_s": col(self.time_s), "energy_j": col(self.energy_j),
+            "evaluated": np.asarray(self.evaluated, bool).tolist(),
+            "reclusters": [int(x) for x in self.reclusters],
+            "global_rounds": [int(x) for x in self.global_rounds],
+            "wall_s": self.wall_s,
+        }
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(d, f, indent=2)
+
+    @classmethod
+    def load(cls, path: str) -> "SweepResult":
+        with open(path) as f:
+            d = json.load(f)
+
+        def col(rows):
+            return np.asarray([[np.nan if x is None else x for x in row]
+                               for row in rows], np.float64)
+        return cls(
+            scenario=Scenario.from_dict(d["scenario"]),
+            seeds=np.asarray(d["seeds"], np.int64),
+            acc=col(d["acc"]), loss=col(d["loss"]),
+            time_s=col(d["time_s"]), energy_j=col(d["energy_j"]),
+            evaluated=np.asarray(d["evaluated"], bool),
+            reclusters=np.asarray(d["reclusters"], np.int64),
+            global_rounds=np.asarray(d["global_rounds"], np.int64),
+            wall_s=d["wall_s"])
+
 
 # --------------------------------------------------------------------------
 # Entry points

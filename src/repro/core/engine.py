@@ -90,7 +90,7 @@ from repro.data.synthetic import client_batches, dirichlet_partition, make_split
 from repro.launch import mesh as mesh_lib
 from repro.models.lenet import init_lenet, lenet_accuracy, lenet_loss
 from repro.obs.telemetry import Telemetry
-from repro.obs.trace import phase_scope
+from repro.obs.trace import COUNTERS, phase_scope
 from repro.orbits import contact as contact_lib
 from repro.orbits import cost as cost_lib
 from repro.orbits import topology as topo_lib
@@ -803,8 +803,22 @@ def run(cfg: FLRunConfig, verbose: bool = False, *,
     return history
 
 
-@functools.lru_cache(maxsize=32)
 def _vmapped_scan_fn(cfg: FLRunConfig):
+    """Counted wrapper over the cached vmapped scan: the fleet sweep
+    layer (`repro.fleet`) asserts one lower+compile per compile-cache
+    equivalence class via ``engine.vmap_cache.hit/miss`` — the batched
+    counterpart of ``api.aot_cache.hit/miss``."""
+    misses0 = _vmapped_scan_fn_cached.cache_info().misses
+    fn = _vmapped_scan_fn_cached(cfg)
+    if _vmapped_scan_fn_cached.cache_info().misses > misses0:
+        COUNTERS.inc("engine.vmap_cache.miss")
+    else:
+        COUNTERS.inc("engine.vmap_cache.hit")
+    return fn
+
+
+@functools.lru_cache(maxsize=32)
+def _vmapped_scan_fn_cached(cfg: FLRunConfig):
     strategy = strat_lib.get(cfg.method)   # validate before tracing
     del strategy
     # the contact plan rides as a separate, non-batched argument: it is

@@ -39,6 +39,7 @@ sharded routing is automatic), which returns a typed
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 from dataclasses import dataclass, field
 from typing import Any, Dict, Optional, Tuple
@@ -471,6 +472,20 @@ class Scenario:
     @classmethod
     def from_json(cls, s: str) -> "Scenario":
         return cls.from_dict(json.loads(s))
+
+    def canonical_json(self) -> str:
+        """Deterministic compact JSON (sorted keys, no whitespace): equal
+        scenarios produce byte-equal strings, so content addressing — the
+        fleet layer's cell keys (`repro.fleet.grid`) — is stable across
+        processes and field-declaration order."""
+        return json.dumps(self.to_dict(), sort_keys=True,
+                          separators=(",", ":"))
+
+    def content_hash(self, n: int = 16) -> str:
+        """Hex content hash of :meth:`canonical_json` (first ``n`` chars).
+        Used as the sweep-store cell key: one scenario <=> one key."""
+        return hashlib.sha256(
+            self.canonical_json().encode()).hexdigest()[:n]
 
     # ------------------------------------------------------------------
     def replace(self, **kw) -> "Scenario":

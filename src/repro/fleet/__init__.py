@@ -1,0 +1,20 @@
+"""Fleet sweep service: manifest-grid orchestration over `repro.api`.
+
+`SweepGrid` (declarative grids of Scenario manifests, content-hashed
+cells) -> `plan_grid` (compile/setup equivalence classes) -> `run_grid`
+(vmapped same-shape batching + cached-executable loops, resumable
+`SweepStore` persistence) -> `SweepStore.query` (time-to-accuracy / cost
+tables).  CLI: ``python -m repro.fleet.run grid.json``.
+"""
+from repro.fleet.exec import execute_plan, run_grid
+from repro.fleet.grid import Cell, GridAxis, SweepGrid
+from repro.fleet.plan import (CompileClass, SweepPlan, compile_key,
+                              equivalent_scenario, plan_grid, setup_key)
+from repro.fleet.store import SweepStore
+
+__all__ = [
+    "SweepGrid", "GridAxis", "Cell",
+    "SweepPlan", "CompileClass", "plan_grid",
+    "equivalent_scenario", "compile_key", "setup_key",
+    "run_grid", "execute_plan", "SweepStore",
+]

@@ -1,0 +1,132 @@
+"""Fleet CI smoke: compile-class gate + per-round regression gate + resume.
+
+    PYTHONPATH=src python -m repro.fleet.smoke
+    PYTHONPATH=src python -m repro.fleet.smoke --update   # refresh baseline
+
+Runs the committed tiny grid (``benchmarks/grids/fleet_smoke.json``:
+>=8 cells in >=2 compile-cache equivalence classes) into a TEMP directory
+and fails (exit 2) unless:
+
+(a) **compile count == class count** — lower+compile fired exactly once
+    per equivalence class, measured through
+    ``repro.obs.trace.COUNTERS`` (``engine.vmap_cache.miss`` +
+    ``api.aot_cache.miss`` deltas over the run);
+(b) **resume is a no-op** — re-invoking on the same directory performs
+    zero new runs and zero new compiles;
+(c) **per-round wall time** of each class stays within 2x of the
+    committed baseline (``results/fleet_smoke.json``), the PR-8
+    scale-smoke gating pattern — a superlinear or recompile-per-cell
+    regression trips this.
+
+The timing gate compares like with like only on an idle box; the 2x
+margin absorbs CI noise, as in ``benchmarks/scale_bench.py --smoke``.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import tempfile
+from typing import List, Optional
+
+GRID_PATH = "benchmarks/grids/fleet_smoke.json"
+BASELINE_PATH = "results/fleet_smoke.json"
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.fleet.smoke")
+    ap.add_argument("--grid", default=GRID_PATH)
+    ap.add_argument("--baseline", default=BASELINE_PATH)
+    ap.add_argument("--update", action="store_true",
+                    help="write the measured per-round times as the new "
+                         "committed baseline instead of gating")
+    args = ap.parse_args(argv)
+
+    from repro.fleet.exec import run_grid
+    from repro.fleet.grid import SweepGrid
+    from repro.fleet.plan import plan_grid
+    from repro.obs.trace import COUNTERS, Counters
+
+    grid = SweepGrid.load(args.grid)
+    plan = plan_grid(grid)
+    n_cells, n_classes = len(plan.cells), len(plan.classes)
+    print(f"[fleet-smoke] grid {grid.name!r}: {n_cells} cells, "
+          f"{n_classes} compile classes")
+    assert n_cells >= 8 and n_classes >= 2, (
+        "the committed smoke grid must hold >=8 cells in >=2 classes")
+
+    failures: List[str] = []
+    with tempfile.TemporaryDirectory(prefix="fleet-smoke-") as tmp:
+        c0 = COUNTERS.snapshot()
+        store, report = run_grid(grid, tmp, verbose=False)
+        d1 = Counters.delta(c0, COUNTERS.snapshot())
+        compiles = (d1.get("engine.vmap_cache.miss", 0)
+                    + d1.get("api.aot_cache.miss", 0))
+        print(f"[fleet-smoke] cold run: {report['cells_run']} cells, "
+              f"{compiles} compiles, {report['wall_s']:.1f}s")
+        if report["cells_run"] != n_cells:
+            failures.append(f"cold run completed {report['cells_run']} of "
+                            f"{n_cells} cells")
+        if compiles != n_classes:
+            failures.append(
+                f"compile count {compiles} != class count {n_classes} "
+                f"(counters: { {k: v for k, v in d1.items() if 'cache' in k} })")
+
+        # ---- resume gate: second invocation is a no-op -----------------
+        c1 = COUNTERS.snapshot()
+        _, report2 = run_grid(grid, tmp, verbose=False)
+        d2 = Counters.delta(c1, COUNTERS.snapshot())
+        recompiles = (d2.get("engine.vmap_cache.miss", 0)
+                      + d2.get("api.aot_cache.miss", 0))
+        print(f"[fleet-smoke] resume: {report2['cells_run']} run / "
+              f"{report2['cells_skipped']} skipped, {recompiles} compiles")
+        if report2["cells_run"] != 0 or report2["cells_skipped"] != n_cells:
+            failures.append(
+                f"resume ran {report2['cells_run']} cells "
+                f"(skipped {report2['cells_skipped']}) — expected a no-op")
+        if recompiles != 0:
+            failures.append(f"resume performed {recompiles} compiles")
+
+        # ---- per-round timing gate vs committed baseline ---------------
+        measured = {e["label"]: e["per_round_s"]
+                    for e in report["classes"] if e.get("run")}
+        if args.update:
+            os.makedirs(os.path.dirname(args.baseline), exist_ok=True)
+            with open(args.baseline, "w") as f:
+                json.dump({"grid_hash": grid.grid_hash(),
+                           "classes": {k: {"per_round_s": v}
+                                       for k, v in measured.items()}},
+                          f, indent=2)
+            print(f"[fleet-smoke] baseline updated: {args.baseline}")
+        elif not os.path.exists(args.baseline):
+            failures.append(f"no committed baseline at {args.baseline}; "
+                            f"run with --update on an idle box")
+        else:
+            with open(args.baseline) as f:
+                committed = json.load(f)["classes"]
+            for label, per_round in measured.items():
+                base = committed.get(label, {}).get("per_round_s")
+                if base is None:
+                    failures.append(f"class {label!r} missing from "
+                                    f"baseline (run --update)")
+                elif per_round > 2.0 * base:
+                    failures.append(
+                        f"class {label!r}: {per_round * 1e3:.1f} ms/round "
+                        f"> 2x committed {base * 1e3:.1f} ms/round")
+                else:
+                    print(f"[fleet-smoke] {label}: "
+                          f"{per_round * 1e3:.1f} ms/round "
+                          f"(committed {base * 1e3:.1f}, <=2x OK)")
+
+    if failures:
+        for f_ in failures:
+            print(f"[fleet-smoke] FAIL: {f_}")
+        return 2
+    print("[fleet-smoke] OK: one compile per class, resume no-op, "
+          "per-round within 2x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

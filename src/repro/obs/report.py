@@ -3,6 +3,7 @@
     PYTHONPATH=src python -m repro.obs.report results/run.json
     PYTHONPATH=src python -m repro.obs.report run.json --trace trace.json
     PYTHONPATH=src python -m repro.obs.report run.json --rows 12
+    PYTHONPATH=src python -m repro.obs.report results/sweeps/<grid-hash>/
 
 Prints the run header (method / strategy axes / final accuracy / totals),
 the host phase-time breakdown (setup / lower / compile / run spans +
@@ -11,10 +12,17 @@ cache counters), and — when the run was recorded with
 composition, buffer occupancy, staleness spread, per-stage traffic, the
 compute/comm energy split, and ISL hop counts.  ``--trace`` additionally
 exports the Chrome trace-event JSON (open in https://ui.perfetto.dev).
+
+Pointing it at a **sweep directory** (one written by
+``python -m repro.fleet.run``, identified by its ``grid.json``) instead
+renders the fleet view: grid header, per-compile-class table with the
+COUNTERS compile/cache deltas recorded at execution time, completion
+state, and the per-cell final-accuracy summary grouped over seeds.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 from typing import List, Optional
 
@@ -107,18 +115,84 @@ def render(res, num_rows: int = 20) -> str:
     return "\n".join(out)
 
 
+def render_sweep(root: str) -> str:
+    """The fleet view for a sweep directory written by ``repro.fleet``.
+
+    Shows the grid identity, the per-class execution report (mode,
+    cell counts, wall/per-round time, and the compile/cache COUNTERS
+    deltas captured while the class ran), and a seed-grouped
+    final-accuracy summary over the persisted cells.
+    """
+    from repro.fleet.store import SweepStore
+    store = SweepStore.open_dir(root)
+    grid = store.grid()
+    done = store.completed()
+    out = []
+    out.append(f"== sweep report: {grid.name} ==")
+    out.append(f"dir: {store.root}  grid-hash: {grid.grid_hash()}")
+    out.append(f"cells: {len(done)} completed of {len(grid.cells())}")
+
+    report = store.read_report()
+    out.append("")
+    if report is None:
+        out.append("(no report.json yet — run "
+                   "`python -m repro.fleet.run <grid.json>` to execute)")
+    else:
+        out.append(f"-- last invocation: {report['cells_run']} run / "
+                   f"{report['cells_skipped']} skipped in "
+                   f"{report['wall_s']:.1f}s --")
+        head = (" class                                    | mode | cells"
+                " | run |   wall_s | ms/round | compile counters")
+        out.append(head)
+        out.append("-" * len(head))
+        for e in report["classes"]:
+            ctr = ", ".join(f"{k.split('.', 1)[1]}={v}"
+                            for k, v in sorted(e.get("counters", {}).items())
+                            if "cache" in k) or "-"
+            wall = f"{e['wall_s']:9.2f}" if "wall_s" in e else "        -"
+            pr = (f"{e['per_round_s'] * 1e3:9.1f}"
+                  if "per_round_s" in e else "        -")
+            out.append(f" {e['step_key']:<41}| {e['mode']:<5}|"
+                       f"{e['cells']:6d} |{e['run']:4d} |{wall} |{pr} "
+                       f"| {ctr}")
+
+    if done:
+        out.append("")
+        out.append("-- final accuracy (grouped over seeds) --")
+        for gk, results in sorted(store.grouped().items()):
+            sc = results[0].scenario
+            accs = [r.final_acc for r in results]
+            label = (f"{sc.method} N={sc.fleet.num_clients} "
+                     f"K={sc.fleet.num_clusters} {sc.data.dataset.name}")
+            out.append(f"  {label:<48} "
+                       f"acc {float(np.mean(accs)):.3f}"
+                       f" +/- {float(np.std(accs)):.3f}  "
+                       f"({len(results)} cells)")
+    return "\n".join(out)
+
+
 def main(argv: Optional[List[str]] = None) -> int:
     ap = argparse.ArgumentParser(
         prog="python -m repro.obs.report",
-        description="Render a saved RunResult JSON: round table, "
-                    "phase-time breakdown, Perfetto trace export.")
-    ap.add_argument("run_json", help="path written by RunResult.save()")
+        description="Render a saved RunResult JSON (round table, "
+                    "phase-time breakdown, Perfetto trace export) or a "
+                    "fleet sweep directory (per-class compile counters).")
+    ap.add_argument("run_json", help="path written by RunResult.save(), "
+                                     "or a repro.fleet sweep directory")
     ap.add_argument("--rows", type=int, default=20,
                     help="max round-table rows (head+tail; default 20)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="also export Chrome trace-event JSON "
                          "(load in https://ui.perfetto.dev)")
     args = ap.parse_args(argv)
+
+    if os.path.isdir(args.run_json):
+        if not os.path.exists(os.path.join(args.run_json, "grid.json")):
+            print(f"{args.run_json} is a directory without a grid.json — "
+                  f"not a sweep store", file=sys.stderr)
+            return 2
+        print(render_sweep(args.run_json))
+        return 0
 
     from repro.api import RunResult
     res = RunResult.load(args.run_json)

@@ -1,0 +1,325 @@
+"""repro.fleet: grid expansion/hashing, equivalence-class planning
+(compile + setup, COUNTERS-asserted), vmapped/loop execution, the
+resumable store, trajectory-preservation pins behind
+`plan.equivalent_scenario`, and the 24-cell acceptance grid (one
+lower+compile per class, CLI re-invocation is a no-op)."""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import engine
+from repro.core.scenario import Scenario
+from repro.fleet import (GridAxis, SweepGrid, SweepStore, compile_key,
+                         equivalent_scenario, plan_grid, run_grid,
+                         setup_key)
+from repro.obs.trace import COUNTERS, Counters
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+DEMO24 = os.path.join(REPO, "benchmarks", "grids", "demo24.json")
+SMOKE = os.path.join(REPO, "benchmarks", "grids", "fleet_smoke.json")
+
+TINY_BASE = {
+    "data.eval_size": 64, "data.samples_per_client": 16,
+    "fleet.num_clients": 8, "fleet.num_clusters": 2,
+    "train.batch_size": 8, "train.eval_every": 2,
+    "train.local_steps": 1, "train.rounds": 2,
+}
+
+
+def _tiny(method="h-base", **kw):
+    d = Scenario().to_dict()
+    d["method"] = method
+    d["data"].update(eval_size=64, samples_per_client=16)
+    d["fleet"].update(num_clients=8, num_clusters=2)
+    d["train"].update(batch_size=8, eval_every=2, local_steps=1, rounds=2)
+    for k, v in kw.items():
+        top, leaf = k.split("__") if "__" in k else (None, k)
+        (d[top] if top else d)[leaf] = v
+    return Scenario.from_dict(d)
+
+
+def _clear_compile_caches():
+    """Process-global executable caches: cleared so COUNTERS miss/hit
+    assertions are independent of test order."""
+    api._COMPILED.clear()
+    engine._vmapped_scan_fn_cached.cache_clear()
+
+
+# ---- grid: expansion, hashing, JSON round-trip ---------------------------
+
+
+def test_demo24_expands_to_24_distinct_cells():
+    grid = SweepGrid.load(DEMO24)
+    cells = grid.cells()
+    assert len(cells) == 24
+    assert len({c.key for c in cells}) == 24
+    # stable content-addressing: re-expansion gives identical keys
+    assert [c.key for c in grid.cells()] == [c.key for c in cells]
+    assert cells[0].label.startswith("method=h-base")
+
+
+def test_grid_json_round_trip_exact():
+    grid = SweepGrid.load(DEMO24)
+    again = SweepGrid.from_json(grid.to_json())
+    assert again.to_dict() == grid.to_dict()
+    assert again.grid_hash() == grid.grid_hash()
+    with open(DEMO24) as f:
+        assert grid.to_dict() == json.load(f)   # committed file is canonical
+
+
+def test_joint_axis_round_trips():
+    ax = GridAxis.joint("dataset", [
+        ("a", {"data.eval_size": 64, "train.rounds": 2}),
+        ("b", {"data.eval_size": 128, "train.rounds": 4})])
+    grid = SweepGrid.build("j", TINY_BASE, [ax])
+    again = SweepGrid.from_dict(grid.to_dict())
+    assert again == grid
+    assert [c.label for c in again.cells()] == ["dataset=a", "dataset=b"]
+
+
+def test_duplicate_cells_rejected():
+    grid = SweepGrid.build("dup", TINY_BASE,
+                           [GridAxis.single("method",
+                                            ["h-base", "h-base"])])
+    with pytest.raises(ValueError, match="duplicate"):
+        grid.cells()
+
+
+def test_unknown_path_rejected():
+    grid = SweepGrid.build("bad", {"train.bogus_knob": 1},
+                           [GridAxis.single("seed", [0])])
+    with pytest.raises(KeyError, match="bogus_knob"):
+        grid.cells()
+
+
+# ---- planner: equivalence classes ----------------------------------------
+
+
+def test_demo24_plan_four_vmap_classes():
+    plan = plan_grid(SweepGrid.load(DEMO24))
+    assert len(plan.cells) == 24
+    assert plan.num_compiles == 4
+    for cls in plan.classes:
+        assert cls.mode == "vmap"
+        assert len(cls.cells) == 6
+        assert sorted(cls.seeds) == [0, 1, 2, 3, 4, 5]
+    # grid axes only vary method/N/seed -> every (cell, seed) is its own
+    # setup, but compile classes collapse the seed axis
+    assert len(plan.setup_classes) == 24
+
+
+def test_cfedavg_dedupes_across_k_columns():
+    """Centralized methods ignore K (the engine forces K=1): the K axis
+    must collapse into ONE compile class with one job per seed."""
+    grid = SweepGrid.build(
+        "cfa", TINY_BASE,
+        [GridAxis.single("method", ["c-fedavg"]),
+         GridAxis.single("fleet.num_clusters", [2, 3], name="K"),
+         GridAxis.single("seed", [0, 1])])
+    plan = plan_grid(grid)
+    assert len(plan.cells) == 4          # distinct manifests, no dup error
+    assert plan.num_compiles == 1
+    cls = plan.classes[0]
+    assert len(cls.jobs) == 2            # one run per seed, K deduped
+    assert sorted(cls.seeds) == [0, 1]
+    assert cls.mode == "vmap"
+
+
+def test_exec_only_knobs_share_setup_but_split_compile():
+    """client_microbatch / telemetry never touch eager setup (the
+    api._setup_cache_key invariant) but DO change the traced program:
+    one setup class, one compile class each."""
+    cells = [_tiny(), _tiny(exec__client_microbatch=4),
+             _tiny(exec__telemetry=True),
+             _tiny(exec__client_microbatch=4, exec__telemetry=True)]
+    assert len({setup_key(sc) for sc in cells}) == 1
+    assert len({compile_key(sc) for sc in cells}) == 4
+
+
+def test_seed_only_in_setup_key_not_compile_key():
+    a, b = _tiny(seed=0), _tiny(seed=7)
+    assert compile_key(a) == compile_key(b)
+    assert setup_key(a) != setup_key(b)
+
+
+def test_async_and_telemetry_classes_fall_back_to_loop():
+    grid = SweepGrid.build(
+        "loopy", TINY_BASE,
+        [GridAxis.single("method", ["fedbuff"]),
+         GridAxis.single("seed", [0, 1])])
+    plan = plan_grid(grid)
+    assert [c.mode for c in plan.classes] == ["loop"]
+    grid2 = SweepGrid.build(
+        "tele", dict(TINY_BASE, **{"exec.telemetry": True}),
+        [GridAxis.single("seed", [0, 1])])
+    assert [c.mode for c in plan_grid(grid2).classes] == ["loop"]
+
+
+# ---- trajectory pins: equivalent_scenario is execution-preserving --------
+
+
+def test_centralized_k_normalization_preserves_trajectory():
+    raw = _tiny("c-fedavg", fleet__num_clusters=3)
+    eq = equivalent_scenario(raw)
+    assert eq.fleet.num_clusters == 1
+    a, b = api.run(raw), api.run(eq)
+    np.testing.assert_array_equal(a.acc, b.acc)
+    np.testing.assert_array_equal(a.time_s, b.time_s)
+    np.testing.assert_array_equal(a.energy_j, b.energy_j)
+
+
+def test_inert_knob_normalization_preserves_trajectory():
+    """dropout_threshold (no re-cluster) and the MAML rates (no MAML
+    inheritance) are only read behind Strategy flags: varying them on
+    h-base must not move the trajectory, and the planner must key both
+    variants identically."""
+    raw = _tiny("h-base", fleet__dropout_threshold=0.9,
+                train__maml_alpha=0.123)
+    assert compile_key(raw) == compile_key(_tiny("h-base"))
+    a, b = api.run(raw), api.run(_tiny("h-base"))
+    np.testing.assert_array_equal(a.acc, b.acc)
+    np.testing.assert_array_equal(a.energy_j, b.energy_j)
+
+
+# ---- executor + store: COUNTERS-asserted compile sharing, resume ---------
+
+
+def test_exec_knob_grid_one_setup_four_compiles(tmp_path):
+    """The satellite-3 contract end-to-end: 4 cells differing only in
+    exec knobs run as ONE setup (setup_cache.miss==1, 3 hits) but FOUR
+    compiles (aot_cache.miss==4), asserted through COUNTERS deltas."""
+    grid = SweepGrid.build(
+        "exec-knobs", TINY_BASE,
+        [GridAxis.joint("exec", [
+            ("plain", {"exec.client_microbatch": 0}),
+            ("mb4", {"exec.client_microbatch": 4}),
+            ("tele", {"exec.telemetry": True}),
+            ("mb4-tele", {"exec.client_microbatch": 4,
+                          "exec.telemetry": True})])])
+    plan = plan_grid(grid)
+    assert len(plan.setup_classes) == 1 and plan.num_compiles == 4
+    _clear_compile_caches()
+    c0 = COUNTERS.snapshot()
+    _, report = run_grid(grid, str(tmp_path), verbose=False)
+    d = Counters.delta(c0, COUNTERS.snapshot())
+    assert report["cells_run"] == 4
+    assert d.get("api.setup_cache.miss", 0) == 1
+    assert d.get("api.setup_cache.hit", 0) == 3
+    assert d.get("api.aot_cache.miss", 0) == 4
+
+
+def test_demo24_acceptance_one_compile_per_class_and_cli_noop(tmp_path):
+    """The PR acceptance criterion: the 24-cell demo grid completes with
+    lower+compile invoked exactly once per equivalence class, and
+    re-invoking the CLI on the same directory performs zero new runs."""
+    from repro.fleet.run import main as fleet_cli
+    grid = SweepGrid.load(DEMO24)
+    _clear_compile_caches()
+    c0 = COUNTERS.snapshot()
+    _, report = run_grid(grid, str(tmp_path), verbose=False)
+    d = Counters.delta(c0, COUNTERS.snapshot())
+    assert report["cells_run"] == 24
+    compiles = (d.get("engine.vmap_cache.miss", 0)
+                + d.get("api.aot_cache.miss", 0))
+    assert compiles == report["num_classes"] == 4
+
+    c1 = COUNTERS.snapshot()
+    assert fleet_cli([DEMO24, "--base-dir", str(tmp_path),
+                      "--quiet"]) == 0
+    d2 = Counters.delta(c1, COUNTERS.snapshot())
+    assert d2.get("fleet.cells.run", 0) == 0
+    assert d2.get("fleet.cells.skipped", 0) == 24
+    assert d2.get("engine.vmap_cache.miss", 0) == 0
+    assert d2.get("api.aot_cache.miss", 0) == 0
+
+
+def test_store_resume_runs_only_missing_cells(tmp_path):
+    grid = SweepGrid.build(
+        "resume", TINY_BASE,
+        [GridAxis.single("seed", [0, 1, 2])])
+    store, report = run_grid(grid, str(tmp_path), verbose=False)
+    assert report["cells_run"] == 3
+    victim = sorted(store.completed())[0]
+    os.remove(store.cell_path(victim))
+    _, again = run_grid(grid, str(tmp_path), verbose=False)
+    assert again["cells_run"] == 1 and again["cells_skipped"] == 2
+    assert store.completed() == {c.key for c in grid.cells()}
+
+
+def test_store_rejects_edited_grid_manifest(tmp_path):
+    grid = SweepGrid.build("guard", TINY_BASE,
+                           [GridAxis.single("seed", [0])])
+    store = SweepStore.open(str(tmp_path), grid)
+    gpath = os.path.join(store.root, "grid.json")
+    with open(gpath) as f:
+        d = json.load(f)
+    d["name"] = "edited"
+    with open(gpath, "w") as f:
+        json.dump(d, f)
+    with pytest.raises(ValueError, match="different grid"):
+        SweepStore.open(str(tmp_path), grid)
+
+
+def test_store_cells_embed_own_manifest_and_query(tmp_path):
+    """Deduplicated c-fedavg cells each persist their OWN manifest (the
+    raw K, not the normalized K=1) with identical trajectories, and the
+    query layer serves seed-averaged time-to-accuracy rows."""
+    grid = SweepGrid.build(
+        "q", TINY_BASE,
+        [GridAxis.single("method", ["c-fedavg"]),
+         GridAxis.single("fleet.num_clusters", [2, 3], name="K"),
+         GridAxis.single("seed", [0, 1])])
+    store, report = run_grid(grid, str(tmp_path), verbose=False)
+    assert report["cells_run"] == 4
+    loaded = store.load_all()
+    ks = sorted(r.scenario.fleet.num_clusters for r in loaded.values())
+    assert ks == [2, 2, 3, 3]            # raw manifests, not normalized
+    accs = {r.scenario.fleet.num_clusters: r.acc.tolist()
+            for r in loaded.values() if r.scenario.seed == 0}
+    assert accs[2] == accs[3]            # one run served both K columns
+
+    rows = store.query(target_acc=0.0)
+    assert len(rows) == 2                # one row per K, seeds collapsed
+    for row in rows:
+        assert row["cells"] == 2 and row["seeds"] == [0, 1]
+        assert row["round"] == 2         # acc>=0 at the first eval point
+        assert row["time_s"] is not None
+    never = store.query(target_acc=2.0)
+    assert all(r["time_s"] is None for r in never)
+
+
+def test_report_cli_renders_sweep_directory(tmp_path, capsys):
+    from repro.obs.report import main as report_cli
+    grid = SweepGrid.build("rpt", TINY_BASE,
+                           [GridAxis.single("seed", [0, 1])])
+    _clear_compile_caches()
+    store, _ = run_grid(grid, str(tmp_path), verbose=False)
+    assert report_cli([store.root]) == 0
+    out = capsys.readouterr().out
+    assert "sweep report: rpt" in out
+    assert "cells: 2 completed of 2" in out
+    assert "vmap_cache.miss=1" in out    # per-class compile counters
+
+
+# ---- SweepResult save/load (satellite 1) ---------------------------------
+
+
+def test_sweep_result_save_load_exact_round_trip(tmp_path):
+    sc = _tiny("h-base")
+    sweep = api.run_sweep(sc, seeds=(0, 1))
+    p1 = str(tmp_path / "sweep.json")
+    sweep.save(p1)
+    again = api.SweepResult.load(p1)
+    assert again.scenario == sc          # embedded manifest survives
+    np.testing.assert_array_equal(again.acc, sweep.acc)   # NaNs included
+    np.testing.assert_array_equal(again.evaluated, sweep.evaluated)
+    np.testing.assert_array_equal(again.seeds, sweep.seeds)
+    np.testing.assert_array_equal(again.reclusters, sweep.reclusters)
+    p2 = str(tmp_path / "sweep2.json")
+    again.save(p2)
+    with open(p1) as f1, open(p2) as f2:
+        assert f1.read() == f2.read()    # byte-exact re-serialization
+    assert np.isnan(sweep.acc[:, 0]).all()   # eval_every=2: round 1 masked
